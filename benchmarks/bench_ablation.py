@@ -1,0 +1,27 @@
+"""Ablation (beyond the paper's figures): AcceLLM with redundancy DISABLED
+— isolates how much of the gain comes from the redundant KV copies vs the
+pairing/scheduling alone. Without replicas, role flips stall the flipping
+instance's decodes and rebalancing is impossible."""
+import time
+
+from benchmarks.common import emit, run_sim
+from repro.sim import AcceLLMPolicy
+
+
+def main():
+    for rate in (10.0, 30.0):
+        t0 = time.perf_counter()
+        _, with_r = run_sim(AcceLLMPolicy(redundancy=True), "mixed", rate,
+                            30.0, 4)
+        _, without = run_sim(AcceLLMPolicy(redundancy=False), "mixed", rate,
+                             30.0, 4)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"ablation_redundancy_rate{int(rate)}", us,
+             f"with:jct={with_r.jct_p50:.2f},tbt_worst="
+             f"{with_r.tbt_worst * 1e3:.1f}ms;"
+             f"without:jct={without.jct_p50:.2f},tbt_worst="
+             f"{without.tbt_worst * 1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Real-engine microbenchmarks: wall time of prefill / decode / redundancy
+primitives on the reduced model (CPU) — the live counterpart of the
+simulator's analytic iteration times."""
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import AcceLLMCluster
+from repro.models import init_params
+from repro.serving import InstanceEngine, Request
+
+
+def main():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = InstanceEngine(cfg, params, num_slots=8, kv_capacity=256)
+    key = jax.random.PRNGKey(1)
+
+    def mk(i, plen=32, new=16):
+        return Request(prompt_len=plen, max_new_tokens=new,
+                       prompt_tokens=jax.random.randint(
+                           jax.random.fold_in(key, i), (1, plen), 0,
+                           cfg.vocab_size))
+
+    # prefill
+    t0 = time.perf_counter()
+    eng.prefill_request(mk(0))
+    emit("engine_prefill_32tok", (time.perf_counter() - t0) * 1e6, "slots=1")
+    for i in range(1, 6):
+        eng.prefill_request(mk(i))
+    # decode (warm)
+    eng.decode()
+    t0 = time.perf_counter()
+    n = 5
+    for _ in range(n):
+        eng.decode()
+    us = (time.perf_counter() - t0) / n * 1e6
+    emit("engine_decode_step_b6", us, f"tok_s={6 / (us / 1e6):.0f}")
+    # redundancy primitives
+    slot = eng.active_slots()[0]
+    t0 = time.perf_counter()
+    ex = eng.export_slot(slot)
+    emit("engine_export_slot", (time.perf_counter() - t0) * 1e6,
+         "per-request state extract")
+    eng2 = InstanceEngine(cfg, params, num_slots=8, kv_capacity=256,
+                          instance_id=1)
+    t0 = time.perf_counter()
+    eng2.import_slot(0, ex, eng.slot_req[slot], as_replica_of=(0, slot))
+    emit("engine_import_replica", (time.perf_counter() - t0) * 1e6,
+         "replica install")
+    # cluster end-to-end
+    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=8,
+                             kv_capacity=256)
+    for i in range(6):
+        cluster.submit(mk(10 + i))
+    t0 = time.perf_counter()
+    done = cluster.run(max_steps=200)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("engine_cluster_6req_e2e", us,
+         f"finished={len(done)};rebalances={cluster.stats['rebalances']};"
+         f"promotions={cluster.stats['replica_promotions']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 10: interconnect-bandwidth sweep — AcceLLM and Splitwise reach
+peak performance at similar link speeds (mirror traffic is minimal)."""
+import dataclasses
+import time
+
+from benchmarks.common import CFG, emit, run_sim
+from repro.sim import AcceLLMPolicy, H100, InstanceSpec, SplitwisePolicy
+
+
+def main():
+    for link in (50, 200, 450, 900):
+        dev = dataclasses.replace(H100, link_gbps=float(link))
+        row = {}
+        t0 = time.perf_counter()
+        for name, pol in (("splitwise", SplitwisePolicy(1)),
+                          ("accellm", AcceLLMPolicy())):
+            _, s = run_sim(pol, "mixed", 10.0, 40.0, 4, device=dev)
+            row[name] = s
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig10_link{link}GBs", us,
+             f"spl_jct={row['splitwise'].jct_p50:.2f}s;"
+             f"acc_jct={row['accellm'].jct_p50:.2f}s;"
+             f"acc_tok_s={row['accellm'].tokens_per_inst_s:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Figs. 11-15: the 4-panel latency suite (tokens/inst/s, TTFT, TBT,
+JCT) vs request rate, for {mixed, light, heavy} x {H100, 910B2} x
+{vllm, splitwise, accellm} at 4 instances (cluster scaling in Fig. 11/12 is
+reported by the 8/16-instance rows)."""
+import time
+
+from benchmarks.common import emit, policies_for, run_sim
+from repro.sim import ASCEND_910B2, H100
+
+RATES = {
+    "light": (10.0, 30.0, 60.0),
+    "mixed": (10.0, 25.0, 45.0),
+    "heavy": (4.0, 10.0, 20.0),
+}
+
+
+def sweep(workload: str, device, dev_name: str, n_instances: int = 4):
+    for rate in RATES[workload]:
+        t0 = time.perf_counter()
+        cells = {}
+        for name, pol in policies_for(n_instances).items():
+            _, s = run_sim(pol, workload, rate, 30.0, n_instances,
+                           device=device)
+            cells[name] = s
+        us = (time.perf_counter() - t0) * 1e6
+        d = ";".join(
+            f"{n}:tok_s={s.tokens_per_inst_s:.0f},ttft={s.ttft_p50:.3f},"
+            f"tbt={s.tbt_mean * 1e3:.1f}ms,jct={s.jct_p50:.2f}"
+            for n, s in cells.items())
+        emit(f"fig11-15_{workload}_{dev_name}_n{n_instances}_rate{int(rate)}",
+             us, d)
+
+
+def main():
+    for wl in ("mixed", "light", "heavy"):
+        sweep(wl, H100, "h100")
+    sweep("mixed", ASCEND_910B2, "910b2")
+    # cluster scaling (paper: 4/8/16 instances)
+    sweep("mixed", H100, "h100", n_instances=8)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 9: peak per-instance state memory vs request rate — AcceLLM's
+redundant copies cost only a few extra GB."""
+import time
+
+from benchmarks.common import emit, policies_for, run_sim
+
+
+def main():
+    for rate in (4.0, 8.0, 12.0):
+        peaks = {}
+        for name, pol in policies_for(4).items():
+            t0 = time.perf_counter()
+            sim, _ = run_sim(pol, "mixed", rate, 40.0, 4)
+            us = (time.perf_counter() - t0) * 1e6
+            peaks[name] = max(i.peak_state_bytes for i in sim.instances) / 1e9
+        emit(f"fig9_memory_rate{int(rate)}", us,
+             f"vllm={peaks['vllm']:.1f}GB;splitwise={peaks['splitwise']:.1f}GB;"
+             f"accellm={peaks['accellm']:.1f}GB;"
+             f"overhead={peaks['accellm'] - peaks['splitwise']:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

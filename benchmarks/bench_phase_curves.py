@@ -1,0 +1,27 @@
+"""Paper Figs. 3 & 4: prefill execution time/throughput vs prompt length and
+batch; decode step time / token throughput vs batch and KV length."""
+from benchmarks.common import emit, perf, timed
+
+
+def main():
+    pm = perf()
+    # Fig. 3 — prefill: time & throughput vs (len, batch)
+    for plen in (128, 512, 1024, 2048):
+        for batch in (1, 4, 16):
+            t = pm.prefill_time([plen] * batch)
+            us = timed(pm.prefill_time, [plen] * batch, n=50)
+            thr = plen * batch / t
+            emit(f"fig3_prefill_len{plen}_b{batch}", us,
+                 f"t={t * 1e3:.2f}ms;tok_s={thr:.0f}")
+    # Fig. 4 — decode: time & throughput vs (batch, kv len)
+    for length in (250, 500, 1000):
+        for batch in (1, 8, 32, 64):
+            t = pm.decode_step_time([length] * batch)
+            us = timed(pm.decode_step_time, [length] * batch, n=50)
+            thr = batch / t
+            emit(f"fig4_decode_len{length}_b{batch}", us,
+                 f"t={t * 1e3:.3f}ms;tok_s={thr:.0f}")
+
+
+if __name__ == "__main__":
+    main()

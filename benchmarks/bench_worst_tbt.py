@@ -1,0 +1,30 @@
+"""Paper Fig. 16: worst-case TBT — vLLM co-batching spikes, AcceLLM flat.
+Plus a Sarathi-Serve (chunked prefill) column from the paper's related work:
+bounded spikes, but still above AcceLLM and at a TTFT cost."""
+import time
+
+from benchmarks.common import emit, policies_for, run_sim
+from repro.sim import SarathiPolicy
+
+
+def main():
+    t0 = time.perf_counter()
+    cells = {}
+    pols = dict(policies_for(4))
+    pols["sarathi"] = SarathiPolicy(512)
+    for name, pol in pols.items():
+        _, s = run_sim(pol, "mixed", 10.0, 40.0, 4)
+        cells[name] = s
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig16_worst_tbt", us, ";".join(
+        f"{n}={s.tbt_worst * 1e3:.1f}ms" for n, s in cells.items()))
+    v, a = cells["vllm"].tbt_worst, cells["accellm"].tbt_worst
+    emit("fig16_spike_ratio", us, f"vllm_over_accellm={v / a:.1f}x")
+    emit("fig16_sarathi_ttft_tradeoff", us,
+         f"sarathi_ttft={cells['sarathi'].ttft_p50:.3f};"
+         f"vllm_ttft={cells['vllm'].ttft_p50:.3f};"
+         f"sarathi_tbtw={cells['sarathi'].tbt_worst * 1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Shared benchmark helpers. Every benchmark prints CSV rows:
+``name,us_per_call,derived`` (derived = the paper-figure quantity)."""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Callable
+
+from repro.configs import get_config
+from repro.sim import (AcceLLMPolicy, ASCEND_910B2, H100, InstanceSpec,
+                       PerfModel, Simulator, SplitwisePolicy, VLLMPolicy,
+                       make_workload, summarize)
+
+CFG = get_config("llama2-70b")            # the paper's eval model (§5.2)
+
+
+def perf(device=H100, n_dev=4) -> PerfModel:
+    return PerfModel(CFG, InstanceSpec(device, n_dev))
+
+
+def run_sim(policy, workload, rate, duration, n_instances, device=H100,
+            seed=0, horizon_mult=10.0):
+    reqs = make_workload(workload, rate=rate, duration=duration, seed=seed)
+    sim = Simulator(policy, perf(device), n_instances=n_instances)
+    done = sim.run([copy.deepcopy(r) for r in reqs],
+                   horizon=duration * horizon_mult)
+    return sim, summarize(done, n_instances, duration * horizon_mult)
+
+
+def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:
+    """Mean wall microseconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+POLICIES = {
+    "vllm": VLLMPolicy,
+    "splitwise": lambda: SplitwisePolicy(1),
+    "accellm": AcceLLMPolicy,
+}
+
+
+def policies_for(n_instances: int):
+    n_prefill = {4: 1, 8: 2, 16: 4}.get(n_instances, max(1, n_instances // 4))
+    return {
+        "vllm": VLLMPolicy(),
+        "splitwise": SplitwisePolicy(n_prefill),
+        "accellm": AcceLLMPolicy(),
+    }

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_phase_curves",    # Figs 3-4
+    "benchmarks.bench_interference",    # Fig 5
+    "benchmarks.bench_memory",          # Fig 9
+    "benchmarks.bench_interconnect",    # Fig 10
+    "benchmarks.bench_latency_suite",   # Figs 11-15
+    "benchmarks.bench_worst_tbt",       # Fig 16
+    "benchmarks.bench_ablation",        # beyond-paper: redundancy on/off
+    "benchmarks.bench_engine",          # real-engine microbench
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        try:
+            importlib.import_module(mod_name).main()
+        except Exception:  # noqa: BLE001
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""AcceLLM reproduction: redundancy-based LLM serving on JAX/TPU."""
+
+__version__ = "0.1.0"

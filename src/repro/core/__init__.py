@@ -1,0 +1,12 @@
+"""AcceLLM's contribution: redundant-KV instance pairs, dynamic roles,
+and state-bytes load balancing (scheduler + redundancy + balancer)."""
+from repro.core.balancer import Item, imbalance, partition, should_rebalance
+from repro.core.cluster import AcceLLMCluster, Pair, Placement
+from repro.core.kvbytes import (bytes_per_token, decode_read_bytes,
+                                fixed_state_bytes, state_bytes_at)
+
+__all__ = [
+    "AcceLLMCluster", "Pair", "Placement", "Item", "partition", "imbalance",
+    "should_rebalance", "bytes_per_token", "fixed_state_bytes",
+    "state_bytes_at", "decode_read_bytes",
+]

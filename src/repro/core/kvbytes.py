@@ -1,0 +1,63 @@
+"""Serving-state size accounting per architecture.
+
+AcceLLM's scheduler balances decode batches by the *bytes of state read per
+step* (decode is HBM-bandwidth-bound, §3.3) and its redundancy manager
+budgets replica memory. Both need bytes-per-request as a function of the
+current sequence length. For attention archs that is length-proportional
+KV; for MLA it is the (much smaller) latent; for SSM blocks it is a
+length-independent constant — which is why the balancer weights requests by
+``state_bytes(cfg, length)`` rather than raw length (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.state import xlstm_dims
+
+
+def bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    """KV-cache bytes added per token (attention layers only)."""
+    n_attn = sum(1 for b in cfg.block_pattern if b == "attn")
+    if cfg.attention_kind == "mla":
+        per = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * dtype_bytes
+    else:
+        per = 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+    return n_attn * per
+
+
+def fixed_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Length-independent state bytes (SSM/conv/xLSTM memories)."""
+    total = 0
+    for blk in cfg.block_pattern:
+        if blk == "mamba":
+            mc = cfg.mamba
+            d_in = mc.expand * cfg.d_model
+            total += d_in * mc.d_state * 4          # ssm state f32
+            total += mc.d_conv * d_in * dtype_bytes  # conv window
+        elif blk == "mlstm":
+            d_in, hd = xlstm_dims(cfg, "mlstm")
+            h = cfg.num_heads
+            total += (h * hd * hd + h * hd + h) * 4
+            total += cfg.xlstm.conv1d_kernel_size * d_in * 4
+        elif blk == "slstm":
+            total += 4 * cfg.d_model * 4
+    if cfg.is_encoder_decoder:
+        # cached encoder output + cross K/V per decoder layer
+        src = cfg.encoder.max_source_positions
+        total += src * cfg.d_model * dtype_bytes
+        total += (len(cfg.block_pattern) * 2 * src
+                  * cfg.num_kv_heads * cfg.head_dim * dtype_bytes)
+    return total
+
+
+def state_bytes_at(cfg: ModelConfig, length: int, dtype_bytes: int = 2) -> float:
+    """Total serving-state bytes for one request at sequence length."""
+    return bytes_per_token(cfg, dtype_bytes) * length + fixed_state_bytes(
+        cfg, dtype_bytes)
+
+
+def decode_read_bytes(cfg: ModelConfig, length: int,
+                      dtype_bytes: int = 2) -> float:
+    """Bytes streamed from HBM for this request in ONE decode step — the
+    quantity the load balancer equalizes across a pair (weights are shared
+    by the batch, so the per-request marginal cost is exactly its state)."""
+    return state_bytes_at(cfg, length, dtype_bytes)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the serving hot-spots (flash prefill attention,
+GQA decode attention) + jit'd wrappers (ops) and pure-jnp oracles (ref)."""

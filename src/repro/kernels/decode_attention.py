@@ -1,0 +1,126 @@
+"""Pallas TPU decode-attention kernel (single query token vs KV cache).
+
+The decode phase is HBM-bandwidth bound (AcceLLM §3.3): per step the whole
+KV cache streams HBM->VMEM once while compute is two skinny matmuls. The
+kernel therefore tiles the cache's sequence dim and processes all G grouped
+query heads of one KV head per tile, so every K/V byte fetched feeds G
+query heads (GQA bandwidth amplification).
+
+Grid: (batch, kv_heads, num_kv_blocks), KV-block axis innermost and
+sequential, online-softmax accumulation in VMEM scratch. Invalid (not yet
+written) cache slots are masked via the per-request ``length`` scalar,
+prefetched to SMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, num_kv_blocks: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (block_k, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, block_k)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,         # (B, 1, H, hd) or (B, H, hd)
+    k_cache: jax.Array,   # (B, W, KVH, hd)
+    v_cache: jax.Array,
+    lengths: jax.Array,   # (B,) int32 — valid KV entries per request
+    *,
+    scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    squeeze = False
+    if q.ndim == 4:
+        assert q.shape[1] == 1
+        q = q[:, 0]
+        squeeze = True
+    B, H, hd = q.shape
+    W, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_k = min(block_k, W)
+    assert W % block_k == 0, f"cache window {W} must divide block_k {block_k}"
+    nk = W // block_k
+
+    qg = q.reshape(B, KVH, G, hd)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, num_kv_blocks=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, ki, lens: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, ki, lens: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+
+    out = out.reshape(B, H, hd)
+    return out[:, None] if squeeze else out

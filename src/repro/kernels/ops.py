@@ -1,0 +1,67 @@
+"""jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+``backend``:
+  "pallas"     — compiled Mosaic TPU kernel (production target)
+  "interpret"  — Pallas interpret mode (CPU correctness validation)
+  "ref"        — pure-jnp oracle
+
+On CPU hosts the default is "ref" so models run everywhere; tests force
+"interpret" to execute the real kernel bodies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "window", "block_q", "block_k", "backend"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    backend: Optional[str] = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale,
+                                        window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "backend"))
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     scale: Optional[float] = None, block_k: int = 256,
+                     backend: Optional[str] = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths,
+                                         scale=scale)
+    return decode_attention_pallas(
+        q, k_cache, v_cache, lengths, scale=scale, block_k=block_k,
+        interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("channel_blk", "time_blk",
+                                             "backend"))
+def mamba_scan(x, dt, b_ssm, c_ssm, a, d, h0, *, channel_blk: int = 128,
+               time_blk: int = 256, backend: Optional[str] = None):
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.mamba_scan_ref(x, dt, b_ssm, c_ssm, a, d, h0)
+    return mamba_scan_pallas(x, dt, b_ssm, c_ssm, a, d, h0,
+                             channel_blk=channel_blk, time_blk=time_blk,
+                             interpret=(backend == "interpret"))

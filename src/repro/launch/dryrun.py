@@ -1,0 +1,195 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+MUST set the host-device override before any other import (jax locks the
+device count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import sharding  # noqa: E402
+from repro.configs import INPUT_SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import batch_axes, make_production_mesh  # noqa: E402
+from repro.launch.specs import (input_specs, param_pspecs, pick_layout,  # noqa: E402
+                                state_pspecs)
+from repro.models import decode_step, init_params, init_state, prefill  # noqa: E402
+from repro.training import AdamWConfig, init_opt_state, train_step  # noqa: E402
+from repro.training.optimizer import OptState  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results")
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    long_ctx = shape_name == "long_500k"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    layout = pick_layout(cfg, shape)
+    if layout == "fsdp":
+        b_axes = (("pod", "data", "model") if multi_pod
+                  else ("data", "model"))
+        model_axis = None
+    else:
+        b_axes = batch_axes(multi_pod)
+        model_axis = "model"
+
+    # optimizer-state dtype: bf16 m/v for the huge MoE/hybrid archs so the
+    # per-chip footprint stays inside 16 GB v5e HBM (DESIGN.md §5)
+    big = cfg.param_count() > 100e9
+    opt_cfg = AdamWConfig(state_dtype="bfloat16" if big else "float32")
+
+    params_shape = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    mode = "train" if shape.kind == "train" else "serve"
+    p_specs = param_pspecs(cfg, params_shape, mode=mode, multi_pod=multi_pod,
+                           layout=layout)
+    sds, in_specs = input_specs(cfg, shape, multi_pod, layout=layout)
+
+    with sharding.use_mesh(mesh, batch_axes=b_axes, model_axis=model_axis):
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(
+                lambda p: init_opt_state(opt_cfg, p), params_shape)
+            opt_specs = OptState(step=P(), m=p_specs, v=p_specs)
+
+            def fn(params, opt_state, batch, lr):
+                return train_step(cfg, opt_cfg, params, opt_state, batch, lr)
+
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, opt_specs),
+                              _named(mesh, in_specs),
+                              NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            ).lower(params_shape, opt_shape, sds,
+                    jax.ShapeDtypeStruct((), jnp.float32))
+        elif shape.kind == "prefill":
+            state_shape = jax.eval_shape(
+                lambda: init_state(cfg, shape.global_batch, shape.seq_len,
+                                   long_ctx))
+            s_specs = state_pspecs(cfg, state_shape, shape,
+                                   long_context=long_ctx, multi_pod=multi_pod)
+
+            def fn(params, batch, state):
+                logits, state = prefill(cfg, params, batch, state,
+                                        long_context=long_ctx)
+                return jnp.argmax(logits, -1).astype(jnp.int32), state
+
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, in_specs),
+                              _named(mesh, s_specs)),
+                donate_argnums=(2,),
+            ).lower(params_shape, sds, state_shape)
+        else:  # decode
+            state_shape = jax.eval_shape(
+                lambda: init_state(cfg, shape.global_batch, shape.seq_len,
+                                   long_ctx))
+            s_specs = state_pspecs(cfg, state_shape, shape,
+                                   long_context=long_ctx, multi_pod=multi_pod)
+            t_sds = sds.pop("t")
+            t_spec = in_specs.pop("t")
+
+            def fn(params, tokens, state, t):
+                logits, state = decode_step(cfg, params, tokens, state, t,
+                                            long_context=long_ctx)
+                return jnp.argmax(logits, -1).astype(jnp.int32), state
+
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, p_specs),
+                              NamedSharding(mesh, in_specs["tokens"]),
+                              _named(mesh, s_specs),
+                              NamedSharding(mesh, t_spec)),
+                donate_argnums=(2,),
+            ).lower(params_shape, sds["tokens"], state_shape, t_sds)
+    return lowered, mesh
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            save_hlo: bool = True) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False,
+           "layout": pick_layout(get_config(arch), INPUT_SHAPES[shape_name])}
+    try:
+        lowered, mesh = build_lowered(arch, shape_name, multi_pod)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec.update(ok=True, lower_s=round(t1 - t0, 1),
+                   compile_s=round(t2 - t1, 1))
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        if cost:
+            rec["flops"] = float(cost.get("flops", 0.0))
+            rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+            rec["transcendentals"] = float(cost.get("transcendentals", 0.0))
+        if save_hlo:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            tag = f"{arch}_{shape_name}_{rec['mesh']}"
+            with open(os.path.join(RESULTS_DIR, f"hlo_{tag}.txt"), "w") as f:
+                f.write(compiled.as_text())
+        print(f"[OK] {arch} {shape_name} {rec['mesh']} "
+              f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"flops={rec.get('flops', 0):.3e}")
+    except Exception as e:  # noqa: BLE001 — a failure here is a finding
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAIL] {arch} {shape_name} {rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                records.append(run_one(arch, shape, mp,
+                                       save_hlo=not args.no_hlo))
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    n_ok = sum(r["ok"] for r in records)
+    print(f"\n{n_ok}/{len(records)} combinations lowered+compiled")
+    return 0 if n_ok == len(records) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,78 @@
+"""Training launcher: run the substrate end-to-end on any architecture
+(reduced on CPU; the full configs lower via launch/dryrun.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+      --steps 100 [--schedule wsd] [--ckpt /tmp/ckpt.npz]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import init_params
+from repro.training import (SCHEDULES, AdamWConfig, DataConfig, batches,
+                            init_opt_state, make_train_step)
+from repro.training.checkpoint import save
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default="wsd", choices=list(SCHEDULES))
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"{args.steps} steps, schedule={args.schedule}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    opt = init_opt_state(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    sched = SCHEDULES[args.schedule]
+    data = batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                              global_batch=args.batch, seed=0))
+    needs_extra = cfg.frontend is not None or cfg.is_encoder_decoder
+    key = jax.random.PRNGKey(7)
+
+    t0 = time.time()
+    first = last = None
+    for i, b in zip(range(args.steps), data):
+        batch = {"tokens": jnp.asarray(b[:, :-1]),
+                 "labels": jnp.asarray(b[:, 1:])}
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            batch["patch_embeds"] = jax.random.normal(
+                key, (args.batch, cfg.frontend.num_prefix_tokens,
+                      cfg.frontend.embed_dim))
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.random.normal(
+                key, (args.batch, 32, cfg.frontend.embed_dim))
+        lr = sched(i, warmup=max(args.steps // 10, 1), total=args.steps)
+        params, opt, m = step_fn(params, opt, batch, lr)
+        last = float(m["loss"])
+        first = first if first is not None else last
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:4d} loss={last:.4f} lr={float(lr):.3f} "
+                  f"tok/s={tok_s:.0f}")
+    if args.ckpt:
+        save(args.ckpt, params)
+        print(f"checkpoint: {args.ckpt}")
+    print(f"loss {first:.4f} -> {last:.4f}")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

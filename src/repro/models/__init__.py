@@ -1,0 +1,5 @@
+from repro.models.model import (decode_step, forward_mtp, forward_train,
+                                init_params, init_state, prefill)
+
+__all__ = ["init_params", "forward_train", "forward_mtp", "init_state",
+           "prefill", "decode_step"]

@@ -1,0 +1,32 @@
+"""Dense feed-forward layers (SwiGLU / GeLU MLP)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, gelu, swiglu
+
+Array = jax.Array
+
+
+def init_dense_ffn(key, cfg: ModelConfig, d_ff: int, dtype):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": dense_init(kg(), d, d_ff, dtype),
+            "w_up": dense_init(kg(), d, d_ff, dtype),
+            "w_down": dense_init(kg(), d_ff, d, dtype),
+        }
+    return {
+        "w_up": dense_init(kg(), d, d_ff, dtype),
+        "w_down": dense_init(kg(), d_ff, d, dtype),
+    }
+
+
+def dense_ffn(cfg: ModelConfig, params, x: Array) -> Array:
+    if cfg.activation == "swiglu":
+        h = swiglu(x @ params["w_gate"], x @ params["w_up"])
+    else:
+        h = gelu(x @ params["w_up"])
+    return h @ params["w_down"]

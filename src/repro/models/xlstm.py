@@ -1,0 +1,342 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating), after arXiv:2405.04517.
+
+Both run a stabilized recurrent ``lax.scan`` in full mode (the chunkwise
+parallel mLSTM form is an optimization target tracked in EXPERIMENTS.md
+§Perf) and single-step recurrence in decode mode.
+
+Faithfulness notes (documented simplifications):
+  * q/k/v projections are headwise block-diagonal (LinearHeadwiseExpand in
+    the reference code), matching the ~1.3B parameter budget.
+  * i/f gates are per-head scalars from the conv features; o gate is an
+    elementwise sigmoid on the up-projected stream.
+  * sLSTM recurrent gates use headwise block-diagonal recurrent matrices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init, gelu
+from repro.models.state import xlstm_dims
+
+Array = jax.Array
+
+
+def _headwise_init(key, heads: int, hd_in: int, hd_out: int, dtype):
+    return (jax.random.normal(key, (heads, hd_in, hd_out), jnp.float32)
+            * hd_in ** -0.5).astype(dtype)
+
+
+def _headwise(x: Array, w: Array) -> Array:
+    """x (..., H, hd_in) @ w (H, hd_in, hd_out) -> (..., H, hd_out)."""
+    return jnp.einsum("...hi,hio->...ho", x, w)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    d_in, hd = xlstm_dims(cfg, "mlstm")
+    h = cfg.num_heads
+    kg = KeyGen(key)
+    return {
+        "w_up": dense_init(kg(), d, d_in, dtype),
+        "w_z": dense_init(kg(), d, d_in, dtype),
+        "conv_w": (jax.random.normal(kg(), (xc.conv1d_kernel_size, d_in),
+                                     jnp.float32) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": _headwise_init(kg(), h, hd, hd, dtype),
+        "wk": _headwise_init(kg(), h, hd, hd, dtype),
+        "wv": _headwise_init(kg(), h, hd, hd, dtype),
+        "w_i": (jax.random.normal(kg(), (h, hd), jnp.float32) * 0.01),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": (jax.random.normal(kg(), (h, hd), jnp.float32) * 0.01),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # forget bias -> remember
+        "w_o": jnp.zeros((d_in,), jnp.float32),
+        "w_down": dense_init(kg(), d_in, d, dtype),
+    }
+
+
+def _mlstm_step(q_t, k_t, v_t, i_t, f_t, carry):
+    """One stabilized mLSTM step, all f32.
+    q/k/v (B,H,hd); i/f (B,H); carry (C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    C, n, m = carry
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v_t[..., None, :] * k_t[..., :, None])            # C[k-dim, v-dim]
+    n = f_p[..., None] * n + i_p[..., None] * k_t
+    num = jnp.einsum("bhkv,bhk->bhv", C, q_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                      jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), num / den
+
+
+def _mlstm_qkvif(cfg, params, x, conv_hist=None, serving=False):
+    """conv_hist: (B, ksize-1, d_in) previous inputs for decode continuity."""
+    xc = cfg.xlstm
+    d_in, hd = xlstm_dims(cfg, "mlstm")
+    h = cfg.num_heads
+    B, S, _ = x.shape
+    x_up = x @ params["w_up"]
+    z = x @ params["w_z"]
+    # causal depthwise conv + silu (optionally continued from history)
+    w = params["conv_w"].astype(jnp.float32)
+    ks = xc.conv1d_kernel_size
+    hist = ks - 1
+    if conv_hist is not None:
+        x_ext = jnp.concatenate(
+            [conv_hist.astype(x_up.dtype), x_up], axis=1)
+    else:
+        x_ext = jnp.pad(x_up, ((0, 0), (hist, 0), (0, 0)))
+    acc = jnp.zeros((B, S, d_in), jnp.float32)
+    for i in range(ks):
+        acc += x_ext[:, i: i + S].astype(jnp.float32) * w[i]
+    x_c = jax.nn.silu(acc + params["conv_b"].astype(jnp.float32))
+    x_ch = x_c.reshape(B, S, h, hd)
+    x_uh = x_up.astype(jnp.float32).reshape(B, S, h, hd)
+    # sharding scheme (§Perf iteration 4): q/k replicated across the model
+    # axis, v sharded on its head dim -> the matrix memory C shards its
+    # value dim and every in-scan op is local (no per-timestep collectives).
+    # SERVING ONLY: under jax.grad the backward scan all-gathers the sharded
+    # C per timestep for the dq cotangent (measured 10x regression on
+    # train_4k — §Perf iteration 4b), so training keeps GSPMD's choice.
+    from repro import sharding
+    q = _headwise(x_ch, params["wq"].astype(jnp.float32))
+    k = _headwise(x_ch, params["wk"].astype(jnp.float32)) * hd ** -0.5
+    v = _headwise(x_uh, params["wv"].astype(jnp.float32))
+    if serving:
+        q = sharding.constrain(q, "batch", None, None, None)
+        k = sharding.constrain(k, "batch", None, None, None)
+        v = sharding.constrain(v, "batch", None, None, "model")
+    else:
+        # batch-only pins (§Perf iteration 7b): GSPMD loses the batch
+        # sharding through the chunk scan and replicates the whole global
+        # batch per chip; pinning batch is backward-safe (no model-axis
+        # cotangent pathology — that came from sharding C's value dim)
+        q = sharding.constrain(q, "batch", None, None, None)
+        k = sharding.constrain(k, "batch", None, None, None)
+        v = sharding.constrain(v, "batch", None, None, None)
+    i_pre = jnp.einsum("bshd,hd->bsh", x_ch, params["w_i"]) + params["b_i"]
+    f_pre = jnp.einsum("bshd,hd->bsh", x_ch, params["w_f"]) + params["b_f"]
+    f_pre = jax.nn.log_sigmoid(f_pre)
+    o = jax.nn.sigmoid(x_up.astype(jnp.float32) * params["w_o"])
+    return q, k, v, i_pre, f_pre, o, z
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise-parallel mLSTM (§Perf iteration 7)
+#
+# The stabilized recurrence is reformulated over chunks of length L: within
+# a chunk everything is causal matmuls (the D-masked q·k^T form), and the
+# matrix memory C is only touched at chunk boundaries — cutting both the
+# sequential depth (S -> S/L) and the HBM traffic on C by a factor of L.
+# The carry convention (C_hat = C_true * exp(-m), n_hat, m) is identical to
+# the recurrent step, so chunkwise prefill composes with recurrent decode.
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, carry0, chunk: int):
+    """q/k/v (B,S,H,hd) f32; i_pre/f_pre (B,S,H); carry0 (C,n,m).
+    Returns (carry, h (B,S,H,hd))."""
+    B, S, H, hd = q.shape
+    NC = S // chunk
+    L = chunk
+
+    def to_chunks(t):
+        return t.reshape(B, NC, L, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(to_chunks, (q, k, v, i_pre, f_pre)))
+
+    def chunk_body(carry, xs_c):
+        C, n, m_c = carry                        # (B,H,dk,dv),(B,H,dk),(B,H)
+        qc, kc, vc, ic, fc = xs_c                # (B,L,H,*)
+        b = jnp.cumsum(fc, axis=1)               # (B,L,H) inclusive log-decay
+        B_L = b[:, -1]                           # (B,H)
+        a = ic - b                               # i~_s - b_s
+        M = jax.lax.cummax(a, axis=1)            # running max over s<=t
+        m_t = b + jnp.maximum(m_c[:, None], M)   # (B,L,H)
+        # intra-chunk: D[t,s] = exp(b_t - m_t + a_s), s <= t
+        logD = (b - m_t)[:, :, None, :] + a[:, None, :, :]   # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(causal[None, :, :, None], jnp.exp(logD), 0.0)
+        s_qk = jnp.einsum("blhd,bmhd->blmh", qc, kc)
+        intra_num = jnp.einsum("blmh,bmhv->blhv", s_qk * D, vc)
+        intra_n = jnp.einsum("blmh,bmhd->blhd", D, kc)
+        # inter-chunk: decayed state contribution
+        inter_scale = jnp.exp(m_c[:, None] - jnp.maximum(m_c[:, None], M))
+        inter_num = jnp.einsum("blhd,bhdv->blhv", qc, C) \
+            * inter_scale[..., None]
+        n_comb = n[:, None] * inter_scale[..., None] + intra_n
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("blhd,blhd->blh", qc, n_comb)),
+            jnp.exp(-m_t))
+        h = (inter_num + intra_num) / den[..., None]
+        # chunk-end state update
+        m_new = B_L + jnp.maximum(m_c, M[:, -1])
+        w = jnp.exp(a + (B_L - m_new)[:, None])              # (B,L,H)
+        decay = jnp.exp(m_c + B_L - m_new)
+        C_new = C * decay[..., None, None] + jnp.einsum(
+            "blhd,blhv->bhdv", kc * w[..., None], vc)
+        n_new = n * decay[..., None] + jnp.einsum("blh,blhd->bhd", w, kc)
+        return (C_new, n_new, m_new), h
+
+    carry, hs = jax.lax.scan(chunk_body, carry0, xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+    return carry, h
+
+
+MLSTM_CHUNK = 64
+
+
+def mlstm_forward(cfg: ModelConfig, params, x: Array, *, mode: str,
+                  state=None, update_cache: bool = False
+                  ) -> Tuple[Array, Optional[dict]]:
+    d_in, hd = xlstm_dims(cfg, "mlstm")
+    h = cfg.num_heads
+    B, S, _ = x.shape
+    conv_hist = state["conv"][:, 1:] if (mode == "decode" and state is not None) else None
+    serving = update_cache or mode == "decode"
+    q, k, v, i_pre, f_pre, o, z = _mlstm_qkvif(cfg, params, x, conv_hist,
+                                               serving=serving)
+
+    from repro import sharding as _sh
+    if state is not None:
+        carry0 = (state["C"], state["n"], state["m"])
+    else:
+        carry0 = (jnp.zeros((B, h, hd, hd), jnp.float32),
+                  jnp.zeros((B, h, hd), jnp.float32),
+                  jnp.zeros((B, h), jnp.float32))
+    if serving:
+        # pin the matrix memory's value-dim sharding for the whole scan
+        carry0 = (_sh.constrain(carry0[0], "batch", None, None, "model"),
+                  carry0[1], carry0[2])
+
+    if mode == "full":
+        if S % MLSTM_CHUNK == 0 and S >= 2 * MLSTM_CHUNK:
+            carry, h_seq = _mlstm_chunkwise(q, k, v, i_pre, f_pre, carry0,
+                                            MLSTM_CHUNK)
+        else:
+            def step(carry_, inp):
+                q_t, k_t, v_t, i_t, f_t = inp
+                carry_, h_t = _mlstm_step(q_t, k_t, v_t, i_t, f_t, carry_)
+                return carry_, h_t
+
+            carry, hs = jax.lax.scan(
+                step, carry0,
+                (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+                 i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1)))
+            h_seq = hs.swapaxes(0, 1)                    # (B,S,H,hd)
+        new_state = state
+        if update_cache and state is not None:
+            ks = cfg.xlstm.conv1d_kernel_size
+            x_up = (x @ params["w_up"]).astype(jnp.float32)
+            tail = x_up[:, -ks:]
+            pad = ks - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_state = dict(state, C=carry[0], n=carry[1], m=carry[2],
+                             conv=tail)
+    elif mode == "decode":
+        assert state is not None and S == 1
+        carry, h_t = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                 i_pre[:, 0], f_pre[:, 0], carry0)
+        h_seq = h_t[:, None]
+        x_up1 = (x @ params["w_up"]).astype(jnp.float32)
+        conv = jnp.concatenate([state["conv"][:, 1:], x_up1], axis=1)
+        new_state = dict(state, C=carry[0], n=carry[1], m=carry[2], conv=conv)
+    else:
+        raise ValueError(mode)
+
+    out = (h_seq.reshape(B, S, d_in) * o).astype(x.dtype)
+    out = out * jax.nn.silu(z)
+    return out @ params["w_down"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_ff, _ = xlstm_dims(cfg, "slstm")
+    h = cfg.num_heads
+    hd = d // h
+    kg = KeyGen(key)
+    return {
+        "w_in": dense_init(kg(), d, 4 * d, dtype),          # i,f,z,o from x
+        "r": _headwise_init(kg(), h, hd, 4 * hd, dtype),    # recurrent, headwise
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "w_up": dense_init(kg(), d, 2 * d_ff, dtype),       # gated FFN
+        "w_down": dense_init(kg(), d_ff, d, dtype),
+    }
+
+
+def _slstm_step(cfg, params, x_t, carry):
+    """x_t (B, 4d) pre-activations from input; carry (c, n, h, m) each (B,d)."""
+    d = cfg.d_model
+    heads = cfg.num_heads
+    hd = d // heads
+    c, n, h_prev, m = carry
+    rec = _headwise(h_prev.reshape(-1, heads, hd),
+                    params["r"].astype(jnp.float32)).reshape(-1, 4 * d)
+    pre = x_t + rec + params["b"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    f_pre = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_p = jnp.exp(i_pre - m_new)
+    f_p = jnp.exp(f_pre + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_pre)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(cfg: ModelConfig, params, x: Array, *, mode: str,
+                  state=None, update_cache: bool = False
+                  ) -> Tuple[Array, Optional[dict]]:
+    d = cfg.d_model
+    d_ff, _ = xlstm_dims(cfg, "slstm")
+    B, S, _ = x.shape
+    from repro import sharding as _sh
+    x_pre = (x @ params["w_in"]).astype(jnp.float32)        # (B,S,4d)
+    x_pre = _sh.constrain(x_pre, "batch", None, None)  # §Perf iteration 7b
+
+    if state is not None:
+        carry0 = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        z = jnp.zeros((B, d), jnp.float32)
+        carry0 = (z, z, z, z)
+
+    if mode == "full":
+        def step(carry, x_t):
+            return _slstm_step(cfg, params, x_t, carry)
+        carry, hs = jax.lax.scan(step, carry0, x_pre.swapaxes(0, 1))
+        h_seq = hs.swapaxes(0, 1)
+        new_state = state
+        if update_cache and state is not None:
+            new_state = dict(state, c=carry[0], n=carry[1], h=carry[2],
+                             m=carry[3])
+    elif mode == "decode":
+        assert state is not None and S == 1
+        carry, h_t = _slstm_step(cfg, params, x_pre[:, 0], carry0)
+        h_seq = h_t[:, None]
+        new_state = dict(state, c=carry[0], n=carry[1], h=carry[2], m=carry[3])
+    else:
+        raise ValueError(mode)
+
+    h_seq = h_seq.astype(x.dtype)
+    up = h_seq @ params["w_up"]
+    gate, val = jnp.split(up, 2, axis=-1)
+    return (gelu(gate) * val) @ params["w_down"], new_state

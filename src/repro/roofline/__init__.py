@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                                     analyze, collective_bytes, model_flops)
+
+__all__ = ["analyze", "collective_bytes", "model_flops", "Roofline",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW"]

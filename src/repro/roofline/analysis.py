@@ -1,0 +1,393 @@
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds per step:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = weighted_collective_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-chip: the SPMD
+module is a single-device program). Collective bytes are NOT in
+cost_analysis: we parse the post-partitioning HLO text, crediting each
+collective its result-shape bytes x a per-kind wire factor, and multiply
+ops inside ``while`` bodies by the loop's ``known_trip_count`` (the layer
+scan!), propagated through the computation call graph.
+
+Wire factors (ring-algorithm per-device bytes, n = group size):
+  all-gather      ~ R * (n-1)/n            (R = result bytes)
+  all-reduce      ~ 2R * (n-1)/n
+  reduce-scatter  ~ R                       (R = input ~ result*n; we see
+                                             the result: R_res * (n-1))
+  all-to-all      ~ R * (n-1)/n
+  collective-permute ~ R
+
+Hardware constants (TPU v5e, from the brief): 197 TFLOP/s bf16,
+819 GB/s HBM, 50 GB/s/link ICI (single-link conservative).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) (?:\([^)]*\))? ?->", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?body=%?([\w.\-]+).*?known_trip_count\":\{\"n\":\"(\d+)\"",
+    re.S)
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / max(n, 1)
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / max(n, 1)
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / max(n, 1)
+    return float(result_bytes)  # collective-permute
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        header = re.match(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\) -> ", line)
+        if header and line.rstrip().endswith("{"):
+            cur_name = header.group(1)
+            cur_lines = []
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = ""
+                comps[cur_name] = ""
+                comps["__entry_name__"] = cur_name  # type: ignore
+            continue
+        if line.startswith("}"):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def _multipliers(comps: Dict[str, str], entry: Optional[str]
+                 ) -> Dict[str, float]:
+    """Loop-trip multiplier per computation, propagated from ENTRY."""
+    edges: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    for cname, body in comps.items():
+        for line in body.splitlines():
+            trip = 1
+            wm = re.search(r"known_trip_count\":\{\"n\":\"(\d+)\"", line)
+            if wm:
+                trip = int(wm.group(1))
+            for callee in _CALL_RE.findall(line):
+                if callee in comps:
+                    edges[cname].append((callee, trip if " while(" in line
+                                         else 1))
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None or entry not in comps:
+        entry = next(iter(comps)) if comps else None
+    if entry is None:
+        return mult
+    mult[entry] = 1.0
+    for _ in range(len(comps)):
+        changed = False
+        for cname, outs in edges.items():
+            if mult.get(cname, 0.0) <= 0:
+                continue
+            for callee, trip in outs:
+                want = mult[cname] * trip
+                if want > mult.get(callee, 0.0):
+                    mult[callee] = want
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _entry_and_comps(hlo: str):
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    return entry, comps
+
+
+def collective_bytes(hlo: str) -> Tuple[float, Dict[str, float]]:
+    """Per-device wire bytes of one program execution, with loop
+    multipliers propagated through the call graph."""
+    entry, comps = _entry_and_comps(hlo)
+    mult = _multipliers(comps, entry)
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    for cname, body in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for line in body.splitlines():
+            lm = re.match(r"\s*%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                          r"reduce-scatter|all-to-all|collective-permute)"
+                          r"(?:-start)?\(", line)
+            if not lm:
+                continue
+            shape_str, kind = lm.group(1), lm.group(2)
+            rb = _shape_bytes(shape_str)
+            n = _group_size(line)
+            wb = _wire_bytes(kind, rb, n) * m
+            total += wb
+            by_kind[kind] = by_kind.get(kind, 0.0) + wb
+    return total, by_kind
+
+
+# ---------------------------------------------------------------------------
+# Exact matmul FLOPs from HLO (XLA cost_analysis counts while bodies ONCE —
+# a known undercount; we re-derive dot FLOPs with the loop multipliers)
+# ---------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = ([\w\[\],{}\s]+?) "
+                       r"([\w\-]+)\(")
+_PARAM_RE = re.compile(r"([\w.\-]+): ([\w]+\[[\d,]*\])")
+_DOT_OPS_RE = re.compile(r" dot\(%?([\w.\-]+), %?([\w.\-]+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_dims(shape_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def dot_flops(hlo: str) -> float:
+    """Per-device matmul FLOPs of one execution (elementwise ops excluded,
+    documented in EXPERIMENTS.md; matmuls dominate every assigned arch)."""
+    raw = hlo
+    # computation headers carry parameter shapes
+    entry, comps = _entry_and_comps(raw)
+    mult = _multipliers(comps, entry)
+
+    # header param shapes per computation
+    header_shapes: Dict[str, Dict[str, str]] = {}
+    for line in raw.splitlines():
+        h = re.match(r"^(?:ENTRY )?%?([\w.\-]+) \((.*)\) -> ", line)
+        if h and line.rstrip().endswith("{"):
+            header_shapes[h.group(1)] = dict(
+                (nm, sh) for nm, sh in _PARAM_RE.findall(h.group(2)))
+
+    total = 0.0
+    for cname, body in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        local: Dict[str, str] = dict(header_shapes.get(cname, {}))
+        lines = body.splitlines()
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if im:
+                local[im.group(1)] = im.group(2).strip()
+        for line in lines:
+            if " dot(" not in line:
+                continue
+            im = _INSTR_RE.match(line)
+            ops = _DOT_OPS_RE.search(line)
+            lc = _LHS_C_RE.search(line)
+            if not (im and ops):
+                continue
+            res_dims = _shape_dims(im.group(2)) or []
+            lhs_shape = local.get(ops.group(1))
+            contract = 1
+            if lhs_shape is not None and lc:
+                ldims = _shape_dims(lhs_shape) or []
+                for ci in lc.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        contract *= ldims[int(ci)]
+            n_res = 1
+            for d in res_dims:
+                n_res *= d
+            total += 2.0 * n_res * contract * m
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM bytes (the CPU backend's cost_analysis bytes are unusable:
+# loop bodies counted once AND bf16 weights upcast to f32 by the CPU
+# emitter; we model the real TPU traffic structurally instead)
+# ---------------------------------------------------------------------------
+
+ACT_IO_FACTOR = 12   # per-layer activation reads+writes, in units of
+                     # tokens x d_model x 2B (block I/O, qkv/ffn temps)
+
+
+def _scan_state_bytes(cfg, shape, chips: int) -> float:
+    """Per-chip HBM traffic of recurrent-state carries over a full-sequence
+    pass: every scan step reads+writes the carry. mLSTM runs CHUNKWISE
+    (state touched once per chunk of 64 — §Perf iteration 7); mamba/sLSTM
+    are per-step but their states are small."""
+    if shape.kind == "decode":
+        return 0.0
+    from repro.models.state import xlstm_dims
+    B, S = shape.global_batch, shape.seq_len
+    b_loc = max(B // 16, 1)                     # batch over the data axis
+    total = 0.0
+    for blk in cfg.block_pattern:
+        if blk == "mamba":
+            mc = cfg.mamba
+            st = mc.expand * cfg.d_model * mc.d_state * 4
+            total += 2.0 * b_loc * st * S       # r+w per step
+        elif blk == "mlstm":
+            _, hd = xlstm_dims(cfg, "mlstm")
+            st = cfg.num_heads * hd * hd * 4
+            steps = max(S // 64, 1)             # chunkwise: once per chunk
+            total += 2.0 * b_loc * st * steps
+        elif blk == "slstm":
+            total += 2.0 * b_loc * 4 * cfg.d_model * 4 * S
+    return total
+
+
+def analytic_bytes(cfg, shape, chips: int = 256,
+                   layout: str = "tp") -> float:
+    """Per-chip HBM bytes of one step on the single-pod mesh
+    (layout "tp": TP=16 on 'model', 16-way batch/FSDP on 'data';
+    layout "fsdp": pure ZeRO-3 — each chip streams the full gathered
+    weights but holds 1/256 of batch/optimizer)."""
+    from repro.core.kvbytes import state_bytes_at
+    tp = 1 if layout == "fsdp" else 16
+    p_total = cfg.param_count() * 2
+    p_active = cfg.param_count(active_only=True) * 2
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.num_layers
+
+    if shape.kind == "decode":
+        tokens_per_chip = max(B // 16, 1)
+        w = p_active / tp                       # weights: TP-sharded read
+        state = B * state_bytes_at(cfg, min(S, 1 << 30)) / chips
+        acts = tokens_per_chip * d * 2 * ACT_IO_FACTOR * L
+        logits = tokens_per_chip * cfg.vocab_size / tp * 4
+        return w + state + acts + logits
+
+    tokens = B * S
+    # batch over data axis (tp) or the whole mesh (fsdp)
+    tokens_per_chip = tokens / (chips if layout == "fsdp" else 16)
+    acts = tokens_per_chip * d * 2 * ACT_IO_FACTOR * L
+    logits = tokens_per_chip * cfg.vocab_size / tp * 4
+    scan_state = _scan_state_bytes(cfg, shape, chips)
+    if shape.kind == "prefill":
+        w = p_active / tp
+        kv_writes = tokens * (state_bytes_at(cfg, 1)
+                              - state_bytes_at(cfg, 0)) / chips
+        return w + acts + kv_writes + logits + scan_state
+
+    # train: fwd + bwd weight reads (gathered per chip = model shard),
+    # remat recompute of fwd activations, optimizer streams (FSDP-sharded)
+    opt_bytes = 4 if cfg.param_count() <= 100e9 else 2
+    w = 2 * p_total / tp
+    opt = (2 * 2 + 2 * opt_bytes) * cfg.param_count() / chips  # p,g + m,v r/w
+    # fwd + bwd + remat-fwd passes over the recurrent-state traffic
+    return w + 2 * acts + opt + logits + 3 * scan_state
+
+
+# ---------------------------------------------------------------------------
+# Roofline record
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float            # useful FLOPs (6ND / 2ND), global
+    hlo_flops_global: float
+    collective_by_kind: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops_global \
+            if self.hlo_flops_global else float("nan")
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference steps."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: one token per request
+    return 2.0 * n_active * tokens
+
+
+def analyze(record: dict, hlo_text: Optional[str], cfg, shape,
+            chips: int = 256) -> Roofline:
+    # loop-corrected matmul FLOPs from the partitioned HLO; fall back to the
+    # (body-once) cost_analysis number when no HLO text was saved
+    if hlo_text:
+        fl = dot_flops(hlo_text)
+        coll, by_kind = collective_bytes(hlo_text)
+    else:
+        fl = record.get("flops", 0.0)
+        coll, by_kind = 0.0, {}
+    by = analytic_bytes(cfg, shape, chips, layout=record.get("layout", "tp"))
+    return Roofline(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        t_compute=fl / PEAK_FLOPS,
+        t_memory=by / HBM_BW,
+        t_collective=coll / LINK_BW,
+        model_flops=model_flops(cfg, shape),
+        hlo_flops_global=fl * chips,
+        collective_by_kind=by_kind,
+    )

@@ -1,0 +1,5 @@
+from repro.serving.engine import InstanceEngine
+from repro.serving.request import Phase, Request
+from repro.serving.sampling import sample
+
+__all__ = ["InstanceEngine", "Request", "Phase", "sample"]

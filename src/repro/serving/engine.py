@@ -1,0 +1,197 @@
+"""InstanceEngine: the real-execution serving instance.
+
+One engine = one AcceLLM *instance* (paper: 4 accelerators under TP; here:
+a JAX device set / submesh, or a single CPU device in the examples). It owns
+
+  * the model params (full replica per instance — AcceLLM §4.2),
+  * a slot-based continuous batch: fixed ``num_slots`` requests in flight,
+  * the serving state (KV caches / SSM states) for all slots,
+  * per-slot clocks (lengths) — decode runs with per-request ``t``.
+
+Redundancy primitives used by the AcceLLM core:
+  export_slot / import_slot  — whole per-request state (prefill-time KV
+                               streaming; on a TPU mesh this is the
+                               per-layer ppermute described in DESIGN.md §3)
+  copy_kv_line               — the per-decode-step mirror update of one new
+                               KV line (constant-size state copy for SSMs)
+
+The engine never batches prefill with decode (AcceLLM §4.2.3: vLLM modified
+so prefill and decode are never co-scheduled on one instance).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_state, prefill
+from repro.models.state import state_bytes
+from repro.serving.request import Phase, Request
+from repro.serving.sampling import sample
+
+
+def _merge_slot(dst, src, slot: int, src_slot: int = 0):
+    """Copy src's per-request state (batch dim 1 at index src_slot) into
+    dst's batch dim at index ``slot``. Batch is dim 1 for layer states
+    (dim 0 is the segment repeat dim) and dim 0 for ``enc_out``."""
+
+    def merge_layers(d, s):
+        return d.at[:, slot].set(s[:, src_slot])
+
+    out = dict(dst)
+    out["layers"] = jax.tree_util.tree_map(merge_layers, dst["layers"],
+                                           src["layers"])
+    if "enc_out" in dst:
+        out["enc_out"] = dst["enc_out"].at[slot].set(src["enc_out"][src_slot])
+    return out
+
+
+def _extract_slot(state, slot: int):
+    def ex(a):
+        return a[:, slot: slot + 1]
+    out = {"layers": jax.tree_util.tree_map(ex, state["layers"])}
+    if "enc_out" in state:
+        out["enc_out"] = state["enc_out"][slot: slot + 1]
+    return out
+
+
+class InstanceEngine:
+    def __init__(self, cfg: ModelConfig, params, num_slots: int,
+                 kv_capacity: int, instance_id: int = 0,
+                 temperature: float = 0.0, eos_token: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.kv_capacity = kv_capacity
+        self.instance_id = instance_id
+        self.temperature = temperature
+        self.eos_token = eos_token
+        self.state = init_state(cfg, num_slots, kv_capacity)
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self.last_tokens = np.zeros((num_slots,), np.int32)
+        self.slot_req: Dict[int, Request] = {}
+        # replica slots: requests whose primary lives on the paired instance
+        self.replica_of: Dict[int, Tuple[int, int]] = {}  # slot -> (inst, slot)
+        self._key = jax.random.PRNGKey(seed + instance_id)
+        self._jit_decode = jax.jit(
+            functools.partial(decode_step, cfg), donate_argnums=(2,))
+        self._jit_prefill = jax.jit(functools.partial(prefill, cfg))
+
+    # -- capacity ------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        used = set(self.slot_req) | set(self.replica_of)
+        return [s for s in range(self.num_slots) if s not in used]
+
+    def active_slots(self) -> List[int]:
+        return sorted(self.slot_req)
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.slot_req)
+
+    def total_kv_tokens(self) -> int:
+        return int(sum(self.lengths[s] for s in self.slot_req))
+
+    def state_bytes(self) -> int:
+        return state_bytes(self.state)
+
+    # -- prefill --------------------------------------------------------------
+    def prefill_request(self, req: Request, extra: Optional[dict] = None
+                        ) -> int:
+        """Run the prompt through the model into a free slot; returns the
+        first generated token."""
+        free = self.free_slots()
+        assert free, f"instance {self.instance_id} has no free slot"
+        slot = free[0]
+        batch = {"tokens": req.prompt_tokens}
+        if extra:
+            batch.update(extra)
+        fresh = init_state(self.cfg, 1, self.kv_capacity)
+        logits, fresh = self._jit_prefill(self.params, batch, fresh)
+        self._key, sub = jax.random.split(self._key)
+        tok = int(sample(logits, sub, self.temperature)[0])
+        self.state = _merge_slot(self.state, fresh, slot)
+        self.lengths[slot] = req.prompt_len
+        self.last_tokens[slot] = tok
+        self.slot_req[slot] = req
+        req.phase = Phase.DECODE
+        req.generated += 1
+        req.output_tokens.append(tok)
+        return slot
+
+    # -- decode ----------------------------------------------------------------
+    def decode(self) -> Dict[int, int]:
+        """One decode iteration over all active slots; returns slot->token."""
+        if not self.slot_req:
+            return {}
+        tokens = jnp.asarray(self.last_tokens)[:, None]
+        t = jnp.asarray(self.lengths)
+        logits, self.state = self._jit_decode(self.params, tokens, self.state, t)
+        self._key, sub = jax.random.split(self._key)
+        next_tokens = np.asarray(sample(logits, sub, self.temperature))
+        out = {}
+        for slot, req in list(self.slot_req.items()):
+            tok = int(next_tokens[slot])
+            self.lengths[slot] += 1
+            self.last_tokens[slot] = tok
+            req.generated += 1
+            req.output_tokens.append(tok)
+            out[slot] = tok
+            if req.done or (self.eos_token is not None
+                            and tok == self.eos_token):
+                req.phase = Phase.DONE
+                self.release(slot)
+        return out
+
+    # -- slot management --------------------------------------------------------
+    def release(self, slot: int):
+        self.slot_req.pop(slot, None)
+        self.replica_of.pop(slot, None)
+        self.lengths[slot] = 0
+
+    # -- redundancy primitives ---------------------------------------------------
+    def export_slot(self, slot: int):
+        """Per-request state + clock, for replication to the pair partner.
+        On a TPU mesh this is the per-layer KV stream (ppermute) described
+        in DESIGN.md §3 — here it is a device-to-device state copy."""
+        return (_extract_slot(self.state, slot), int(self.lengths[slot]),
+                int(self.last_tokens[slot]))
+
+    def import_slot(self, slot: int, exported, req: Request,
+                    as_replica_of: Optional[Tuple[int, int]] = None):
+        sub_state, length, last_tok = exported
+        self.state = _merge_slot(self.state, sub_state, slot)
+        self.lengths[slot] = length
+        self.last_tokens[slot] = last_tok
+        if as_replica_of is not None:
+            self.replica_of[slot] = as_replica_of
+        else:
+            self.slot_req[slot] = req
+
+    def promote_replica(self, slot: int, req: Request):
+        """Instant role-flip enabled by redundancy (AcceLLM §4.1.2): a
+        replica slot becomes the primary with zero data movement."""
+        assert slot in self.replica_of
+        del self.replica_of[slot]
+        self.slot_req[slot] = req
+
+    def demote_to_replica(self, slot: int, of: Tuple[int, int]):
+        assert slot in self.slot_req
+        del self.slot_req[slot]
+        self.replica_of[slot] = of
+
+    def sync_replica_from(self, src: "InstanceEngine", src_slot: int,
+                          dst_slot: int):
+        """Mirror the partner's newly generated KV line(s) into our replica
+        slot (AcceLLM §4.1.2 'newly computed KV cache lines are transferred
+        back'). Implemented as a per-slot state copy; the traffic this
+        stands for is one KV line (or one constant-size SSM state)."""
+        exported = src.export_slot(src_slot)
+        self.state = _merge_slot(self.state, exported[0], dst_slot)
+        self.lengths[dst_slot] = exported[1]
+        self.last_tokens[dst_slot] = exported[2]

@@ -1,0 +1,102 @@
+"""Mesh/sharding context shared across the model and launch layers.
+
+The model code is mesh-agnostic: it consults this module for the active mesh
+and logical-axis mapping. The launcher (or tests) installs a context via
+``use_mesh``. With no context installed everything is single-device local
+(CPU smoke tests).
+
+Logical axes:
+  batch  — data-parallel batch dim        -> ("pod", "data") or ("data",)
+  model  — tensor/expert parallel dim     -> ("model",)
+  none   — replicated
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ()      # mesh axes forming the batch dim
+    model_axis: Optional[str] = None      # mesh axis for tensor/expert parallel
+    # MoE dispatch strategy: "a2a" (tokens shard over model axis, two
+    # all_to_alls) or "psum" (each model shard computes its local experts on
+    # all tokens, partial results all-reduced). "auto" picks per call site.
+    moe_strategy: str = "auto"
+
+    @property
+    def batch_size_divisor(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+_CTX = ShardCtx()
+
+
+def current() -> ShardCtx:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], *, batch_axes=("data",), model_axis="model",
+             moe_strategy: str = "auto"):
+    global _CTX
+    prev = _CTX
+    _CTX = ShardCtx(mesh=mesh, batch_axes=tuple(batch_axes),
+                    model_axis=model_axis, moe_strategy=moe_strategy)
+    try:
+        yield _CTX
+    finally:
+        _CTX = prev
+
+
+def spec(*logical) -> P:
+    """Translate logical axis names into a PartitionSpec for the active mesh."""
+    ctx = _CTX
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        elif ax == "batch":
+            out.append(ctx.batch_axes if ctx.batch_axes else None)
+        elif ax == "model":
+            out.append(ctx.model_axis)
+        elif ax == "seq":
+            # sequence parallelism: activations shard their seq dim over the
+            # model axis between TP blocks (Megatron-SP); §Perf iteration 2
+            out.append(ctx.model_axis)
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return P(*out)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    ctx = _CTX
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec(*logical)))
+
+
+def named(*logical) -> Optional[NamedSharding]:
+    ctx = _CTX
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, spec(*logical))

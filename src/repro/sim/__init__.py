@@ -1,0 +1,15 @@
+from repro.sim.cluster import Policy, SimInstance, Simulator
+from repro.sim.devices import ASCEND_910B2, DEVICES, H100, TPU_V5E, InstanceSpec
+from repro.sim.metrics import Summary, summarize
+from repro.sim.perf import PerfModel
+from repro.sim.policies import (AcceLLMPolicy, SarathiPolicy,
+                                SplitwisePolicy, VLLMPolicy)
+from repro.sim.workload import WORKLOADS, SimRequest, make_workload
+
+__all__ = [
+    "Simulator", "SimInstance", "Policy", "PerfModel", "InstanceSpec",
+    "H100", "ASCEND_910B2", "TPU_V5E", "DEVICES", "Summary", "summarize",
+    "AcceLLMPolicy", "SarathiPolicy", "SplitwisePolicy", "VLLMPolicy",
+    "WORKLOADS",
+    "SimRequest", "make_workload",
+]

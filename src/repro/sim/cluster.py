@@ -1,0 +1,190 @@
+"""Discrete-event cluster simulator (paper §5.1).
+
+Instances execute *iterations* (a prefill batch or one decode step for the
+whole resident batch). The event loop keeps a heap of (time, event); a
+``Policy`` decides routing, roles, batching, KV movement and balancing —
+three policies reproduce the paper's systems (AcceLLM / Splitwise / vLLM).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.sim.perf import PerfModel
+from repro.sim.workload import SimRequest
+
+
+@dataclass
+class SimInstance:
+    iid: int
+    perf: PerfModel
+    max_batch: int
+    decode_batch: Dict[int, SimRequest] = field(default_factory=dict)
+    replicas: Dict[int, SimRequest] = field(default_factory=dict)
+    prefill_queue: List[SimRequest] = field(default_factory=list)
+    busy: bool = False
+    # peak memory tracking (paper Fig. 9)
+    peak_state_bytes: float = 0.0
+    busy_time: float = 0.0
+    # current running iteration
+    _running: Optional[Tuple[str, tuple]] = None
+
+    def state_bytes(self) -> float:
+        b = sum(self.perf.kv_bytes(r.total_len)
+                for r in self.decode_batch.values())
+        b += sum(self.perf.kv_bytes(r.total_len)
+                 for r in self.replicas.values())
+        return b
+
+    def mem_free(self) -> float:
+        return self.perf.kv_capacity_bytes - self.state_bytes()
+
+    def note_peak(self):
+        self.peak_state_bytes = max(self.peak_state_bytes, self.state_bytes())
+
+
+class Policy:
+    """Hooks the simulator calls; see repro.sim.policies."""
+
+    name = "base"
+
+    def bind(self, sim: "Simulator"):
+        self.sim = sim
+
+    def route(self, req: SimRequest) -> Optional[SimInstance]:
+        raise NotImplementedError
+
+    def next_action(self, inst: SimInstance):
+        """Return ("prefill", [reqs]) | ("decode",) | None."""
+        raise NotImplementedError
+
+    def on_prefill_done(self, inst: SimInstance, reqs: List[SimRequest]):
+        raise NotImplementedError
+
+    def on_decode_done(self, inst: SimInstance):
+        pass
+
+    def decode_step_time(self, inst: SimInstance) -> float:
+        return inst.perf.decode_step_time(
+            [r.total_len for r in inst.decode_batch.values()])
+
+
+class Simulator:
+    def __init__(self, policy: Policy, perf: PerfModel, n_instances: int,
+                 max_batch: int = 64):
+        self.perf = perf
+        self.instances = [SimInstance(i, perf, max_batch)
+                          for i in range(n_instances)]
+        self.policy = policy
+        policy.bind(self)
+        self.now = 0.0
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self.finished: List[SimRequest] = []
+        self.dropped: List[SimRequest] = []
+
+    # -- event helpers ---------------------------------------------------------
+    def push(self, time: float, kind: str, data=None):
+        heapq.heappush(self._heap, (time, next(self._seq), kind, data))
+
+    def kick(self, inst: SimInstance):
+        """Start the next iteration on an idle instance."""
+        if inst.busy:
+            return
+        if not hasattr(self, "_kicking"):
+            self._kicking = set()
+        if inst.iid in self._kicking:
+            return
+        self._kicking.add(inst.iid)
+        try:
+            action = self.policy.next_action(inst)
+        finally:
+            self._kicking.discard(inst.iid)
+        if action is None:
+            return
+        kind = action[0]
+        override = getattr(self.policy, "action_time", None)
+        dur = override(inst, action) if override else None
+        if dur is not None:
+            pass
+        elif kind == "prefill":
+            reqs = action[1]
+            dur = self.perf.prefill_time([r.prompt_len for r in reqs])
+        elif kind == "decode":
+            if not inst.decode_batch:
+                return
+            dur = self.policy.decode_step_time(inst)
+        elif kind == "mixed":  # vLLM-style prefill+decode co-batching
+            reqs = action[1]
+            dur = (self.perf.prefill_time([r.prompt_len for r in reqs])
+                   + self.perf.decode_step_time(
+                       [r.total_len for r in inst.decode_batch.values()]))
+        else:
+            raise ValueError(kind)
+        inst.busy = True
+        inst.busy_time += dur
+        inst._running = (kind, tuple(action[1:]) if len(action) > 1 else (),
+                         tuple(inst.decode_batch))
+        self.push(self.now + dur, "inst_done", inst.iid)
+
+    # -- event handlers -----------------------------------------------------------
+    def _handle_arrival(self, req: SimRequest):
+        inst = self.policy.route(req)
+        if inst is None:
+            self.dropped.append(req)
+            return
+        inst.prefill_queue.append(req)
+        self.kick(inst)
+
+    def _handle_done(self, iid: int):
+        inst = self.instances[iid]
+        kind, payload, batch_snapshot = inst._running
+        inst.busy = False
+        inst._running = None
+        if kind in ("prefill", "mixed"):
+            reqs = list(payload[0])
+            for r in reqs:
+                r.first_token_time = self.now
+                r.token_times.append(self.now)
+                r.generated += 1
+            self.policy.on_prefill_done(inst, reqs)
+        if kind in ("decode", "mixed"):
+            for rid in batch_snapshot:
+                r = inst.decode_batch.get(rid)
+                if r is None:
+                    continue
+                r.generated += 1
+                r.token_times.append(self.now)
+                if r.done:
+                    r.finish_time = self.now
+                    self.finished.append(r)
+                    del inst.decode_batch[rid]
+            self.policy.on_decode_done(inst)
+        inst.note_peak()
+        self.kick(inst)
+
+    def _handle_join(self, data):
+        iid, req = data
+        inst = self.instances[iid]
+        inst.decode_batch[req.rid] = req
+        inst.note_peak()
+        self.kick(inst)
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, requests: List[SimRequest], horizon: float = float("inf")):
+        for r in requests:
+            self.push(r.arrival, "arrival", r)
+        while self._heap:
+            t, _, kind, data = heapq.heappop(self._heap)
+            if t > horizon:
+                break
+            self.now = t
+            if kind == "arrival":
+                self._handle_arrival(data)
+            elif kind == "inst_done":
+                self._handle_done(data)
+            elif kind == "join_decode":
+                self._handle_join(data)
+        return self.finished

@@ -1,0 +1,54 @@
+"""Accelerator device models (paper Table 1 + the TPU target of this repo)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    fp16_tflops: float        # peak dense fp16/bf16
+    hbm_gb: float
+    hbm_bw_gbps: float        # GB/s
+    link_gbps: float          # inter-device / inter-instance GB/s
+    # achievable fractions (calibration knobs; defaults follow common MFU /
+    # bandwidth-utilization figures for serving workloads)
+    compute_eff: float = 0.55
+    bw_eff: float = 0.80
+
+
+# Paper Table 1
+H100 = DeviceSpec("H100", fp16_tflops=989.0, hbm_gb=80.0,
+                  hbm_bw_gbps=3350.0, link_gbps=900.0)
+ASCEND_910B2 = DeviceSpec("910B2", fp16_tflops=400.0, hbm_gb=64.0,
+                          hbm_bw_gbps=1800.0, link_gbps=392.0)
+# This repo's deployment target (roofline constants from the brief)
+TPU_V5E = DeviceSpec("v5e", fp16_tflops=197.0, hbm_gb=16.0,
+                     hbm_bw_gbps=819.0, link_gbps=50.0)
+
+DEVICES = {d.name: d for d in (H100, ASCEND_910B2, TPU_V5E)}
+
+
+@dataclass(frozen=True)
+class InstanceSpec:
+    """An AcceLLM instance: n accelerators under tensor parallelism
+    (paper §4.2.3: 4 accelerators, TP=4, full model replica per instance)."""
+
+    device: DeviceSpec
+    n_devices: int = 4
+
+    @property
+    def tflops(self) -> float:
+        return self.device.fp16_tflops * self.n_devices * self.device.compute_eff
+
+    @property
+    def hbm_bytes(self) -> float:
+        return self.device.hbm_gb * 1e9 * self.n_devices
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.device.hbm_bw_gbps * 1e9 * self.n_devices * self.device.bw_eff
+
+    @property
+    def link_bw(self) -> float:
+        return self.device.link_gbps * 1e9

@@ -1,0 +1,55 @@
+"""Metric aggregation: TTFT / TBT / JCT / cost-efficiency (paper §3.4)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from repro.sim.workload import SimRequest
+
+
+@dataclass
+class Summary:
+    n_finished: int
+    ttft_p50: float
+    ttft_p99: float
+    tbt_mean: float
+    tbt_p99: float
+    tbt_worst: float
+    jct_p50: float
+    jct_p99: float
+    tokens_per_inst_s: float
+    duration: float
+
+    def row(self) -> str:
+        return (f"{self.n_finished},{self.ttft_p50:.4f},{self.ttft_p99:.4f},"
+                f"{self.tbt_mean:.5f},{self.tbt_p99:.5f},{self.tbt_worst:.5f},"
+                f"{self.jct_p50:.3f},{self.jct_p99:.3f},"
+                f"{self.tokens_per_inst_s:.2f}")
+
+    HEADER = ("finished,ttft_p50,ttft_p99,tbt_mean,tbt_p99,tbt_worst,"
+              "jct_p50,jct_p99,tok_per_inst_s")
+
+
+def summarize(finished: List[SimRequest], n_instances: int,
+              duration: float) -> Summary:
+    if not finished:
+        return Summary(0, *([float("nan")] * 7), 0.0, duration)
+    ttfts = np.array([r.ttft() for r in finished])
+    jcts = np.array([r.jct() for r in finished])
+    tbts = np.concatenate([np.asarray(r.tbts()) for r in finished
+                           if len(r.token_times) > 1] or [np.zeros(1)])
+    tokens = sum(r.generated for r in finished)
+    return Summary(
+        n_finished=len(finished),
+        ttft_p50=float(np.percentile(ttfts, 50)),
+        ttft_p99=float(np.percentile(ttfts, 99)),
+        tbt_mean=float(tbts.mean()),
+        tbt_p99=float(np.percentile(tbts, 99)),
+        tbt_worst=float(tbts.max()),
+        jct_p50=float(np.percentile(jcts, 50)),
+        jct_p99=float(np.percentile(jcts, 99)),
+        tokens_per_inst_s=tokens / (n_instances * duration),
+        duration=duration,
+    )

@@ -1,0 +1,86 @@
+"""Analytic per-iteration performance model.
+
+Mirrors the paper's simulator (§5.1): computation, HBM bandwidth, memory
+requirements and KV-transfer costs, parameterized by ModelConfig and
+InstanceSpec. Prefill is compute-bound (§3.2); decode is HBM-bound (§3.3):
+per decode step the instance must stream the weights once plus every
+batched request's KV cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.kvbytes import state_bytes_at
+from repro.sim.devices import InstanceSpec
+
+DTYPE_BYTES = 2
+
+
+@dataclass(frozen=True)
+class PerfModel:
+    cfg: ModelConfig
+    inst: InstanceSpec
+
+    @property
+    def weight_bytes(self) -> float:
+        return self.cfg.param_count() * DTYPE_BYTES
+
+    @property
+    def active_weight_bytes(self) -> float:
+        """Bytes of weights actually read per decode step (MoE: active only)."""
+        return self.cfg.param_count(active_only=True) * DTYPE_BYTES
+
+    @property
+    def kv_capacity_bytes(self) -> float:
+        """HBM left for serving state after weights (+10% activations)."""
+        return self.inst.hbm_bytes - 1.1 * self.weight_bytes
+
+    # -- prefill (compute-bound, §3.2) --------------------------------------
+    def prefill_flops(self, prompt_lens: Sequence[int]) -> float:
+        n_active = self.cfg.param_count(active_only=True)
+        total = 0.0
+        n_attn = sum(1 for b in self.cfg.block_pattern if b == "attn")
+        for s in prompt_lens:
+            total += 2.0 * n_active * s
+            # causal attention: 2 matmuls * s^2/2 * heads*hd per attn layer
+            total += 2.0 * n_attn * (s * s) * self.cfg.num_heads * self.cfg.head_dim
+        return total
+
+    def prefill_time(self, prompt_lens: Sequence[int]) -> float:
+        if not prompt_lens:
+            return 0.0
+        t_compute = self.prefill_flops(prompt_lens) / (self.inst.tflops * 1e12)
+        # weights must stream at least once per pass
+        t_mem = self.weight_bytes / self.inst.hbm_bw
+        return max(t_compute, t_mem)
+
+    # -- decode (HBM-bound, §3.3) --------------------------------------------
+    def decode_step_time(self, lengths: Sequence[int]) -> float:
+        if not lengths:
+            return 0.0
+        kv = sum(state_bytes_at(self.cfg, l, DTYPE_BYTES) for l in lengths)
+        t_mem = (self.active_weight_bytes + kv) / self.inst.hbm_bw
+        flops = 2.0 * self.cfg.param_count(active_only=True) * len(lengths)
+        t_compute = flops / (self.inst.tflops * 1e12)
+        return max(t_mem, t_compute)
+
+    # -- KV movement ----------------------------------------------------------
+    def kv_bytes(self, length: int) -> float:
+        return state_bytes_at(self.cfg, length, DTYPE_BYTES)
+
+    def kv_transfer_time(self, length: int, *, overlap_layers: bool = False
+                         ) -> float:
+        """Whole-state transfer between instances. With per-layer streaming
+        (AcceLLM §4.2.4) only the last layer's worth is visible latency."""
+        t = self.kv_bytes(length) / self.inst.link_bw
+        if overlap_layers:
+            return t / max(1, len(self.cfg.block_pattern))
+        return t
+
+    def mirror_bytes_per_step(self, batch: int) -> float:
+        """Per-decode-step replica-update traffic: one new KV line per
+        request (§4.1.2 — 'minimal compared to prefill')."""
+        from repro.core.kvbytes import bytes_per_token
+        return batch * bytes_per_token(self.cfg, DTYPE_BYTES)

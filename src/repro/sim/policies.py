@@ -1,0 +1,314 @@
+"""The serving systems of the paper's evaluation (§5.2) + one more from
+its related work (§2).
+
+  VLLMPolicy      — vLLM-style: independent instances, continuous batching
+                    that co-schedules prefill with decode (prefill
+                    prioritized). No KV movement. TBT spikes when prompts
+                    land mid-decode (paper Fig. 5 / 16).
+  SplitwisePolicy — Splitwise-style static disaggregation: n_p dedicated
+                    prefill instances, rest decode-only; post-prefill KV
+                    transfer to a decode instance is on the request's
+                    critical path (Fig. 1 Case B).
+  SarathiPolicy   — Sarathi-Serve-style chunked prefill (beyond the paper's
+                    baselines, from its §2): prompts split into fixed-size
+                    chunks co-scheduled with decode, bounding (not
+                    eliminating) the TBT spike — trades TTFT for TBT.
+  AcceLLMPolicy   — the paper's system: instance pairs, dynamic roles,
+                    per-layer-overlapped KV streaming, redundant KV copies,
+                    count+state-bytes decode balancing, replica eviction
+                    under memory pressure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.balancer import Item, partition, should_rebalance
+from repro.sim.cluster import Policy, SimInstance
+from repro.sim.workload import SimRequest
+
+MAX_PREFILL_BATCH = 4
+
+
+def _fits(inst: SimInstance, req: SimRequest, extra: float = 0.0) -> bool:
+    return inst.mem_free() >= inst.perf.kv_bytes(req.prompt_len) + extra
+
+
+# ---------------------------------------------------------------------------
+# vLLM
+# ---------------------------------------------------------------------------
+
+
+class VLLMPolicy(Policy):
+    name = "vllm"
+
+    def route(self, req):
+        # least-loaded instance with memory headroom
+        ok = [i for i in self.sim.instances if _fits(i, req)]
+        pool = ok or self.sim.instances
+        return min(pool, key=lambda i: len(i.decode_batch)
+                   + len(i.prefill_queue))
+
+    def next_action(self, inst):
+        if inst.prefill_queue:
+            take = []
+            while (inst.prefill_queue and len(take) < MAX_PREFILL_BATCH
+                   and len(inst.decode_batch) + len(take) < inst.max_batch
+                   and _fits(inst, inst.prefill_queue[0])):
+                take.append(inst.prefill_queue.pop(0))
+            if take:
+                # co-batched prefill+decode iteration (the TBT spike)
+                return ("mixed", take) if inst.decode_batch else ("prefill", take)
+        if inst.decode_batch:
+            return ("decode",)
+        return None
+
+    def on_prefill_done(self, inst, reqs):
+        for r in reqs:
+            if r.done:
+                r.finish_time = self.sim.now
+                self.sim.finished.append(r)
+            else:
+                inst.decode_batch[r.rid] = r
+        inst.note_peak()
+
+
+# ---------------------------------------------------------------------------
+# Sarathi-Serve (chunked prefill — related-work baseline)
+# ---------------------------------------------------------------------------
+
+
+class SarathiPolicy(VLLMPolicy):
+    name = "sarathi"
+
+    def __init__(self, chunk_tokens: int = 512):
+        self.chunk_tokens = chunk_tokens
+        self._chunk_work: Dict[int, int] = {}   # iid -> tokens this iter
+
+    def next_action(self, inst):
+        completed: List[SimRequest] = []
+        budget = self.chunk_tokens
+        while budget > 0 and inst.prefill_queue:
+            r = inst.prefill_queue[0]
+            if not _fits(inst, r) or (len(inst.decode_batch)
+                                      + len(completed) >= inst.max_batch):
+                break
+            prog = getattr(r, "prefill_progress", 0)
+            take = min(r.prompt_len - prog, budget)
+            r.prefill_progress = prog + take
+            budget -= take
+            if r.prefill_progress >= r.prompt_len:
+                completed.append(inst.prefill_queue.pop(0))
+            # budget exhausted mid-request: loop exits via budget == 0
+        used = self.chunk_tokens - budget
+        self._chunk_work[inst.iid] = used
+        if used or completed:
+            return ("mixed", completed)
+        if inst.decode_batch:
+            return ("decode",)
+        return None
+
+    def action_time(self, inst, action):
+        if action[0] != "mixed":
+            return None
+        used = self._chunk_work.get(inst.iid, 0)
+        t = inst.perf.decode_step_time(
+            [r.total_len for r in inst.decode_batch.values()])
+        if used:
+            t += inst.perf.prefill_time([used])
+        return t
+
+
+# ---------------------------------------------------------------------------
+# Splitwise
+# ---------------------------------------------------------------------------
+
+
+class SplitwisePolicy(Policy):
+    name = "splitwise"
+
+    def __init__(self, n_prefill: int):
+        self.n_prefill = n_prefill
+
+    def bind(self, sim):
+        super().bind(sim)
+        self.prefill_insts = sim.instances[: self.n_prefill]
+        self.decode_insts = sim.instances[self.n_prefill:]
+
+    def route(self, req):
+        return min(self.prefill_insts,
+                   key=lambda i: sum(r.prompt_len for r in i.prefill_queue))
+
+    def next_action(self, inst):
+        if inst in self.prefill_insts:
+            if inst.prefill_queue:
+                take = inst.prefill_queue[:MAX_PREFILL_BATCH]
+                del inst.prefill_queue[:MAX_PREFILL_BATCH]
+                return ("prefill", take)
+            return None
+        return ("decode",) if inst.decode_batch else None
+
+    def on_prefill_done(self, inst, reqs):
+        # KV transfer to the decode instance is on the critical path
+        for r in reqs:
+            if r.done:
+                r.finish_time = self.sim.now
+                self.sim.finished.append(r)
+                continue
+            dst = min(self.decode_insts,
+                      key=lambda i: len(i.decode_batch) - i.mem_free() * 1e-18)
+            dt = inst.perf.kv_transfer_time(r.prompt_len, overlap_layers=False)
+            self.sim.push(self.sim.now + dt, "join_decode", (dst.iid, r))
+
+
+# ---------------------------------------------------------------------------
+# AcceLLM
+# ---------------------------------------------------------------------------
+
+
+class AcceLLMPolicy(Policy):
+    name = "accellm"
+
+    def __init__(self, redundancy: bool = True):
+        self.redundancy = redundancy
+        # rid -> (primary iid, replica iid or None)
+        self.placement: Dict[int, Tuple[int, Optional[int]]] = {}
+
+    def bind(self, sim):
+        super().bind(sim)
+        n = len(sim.instances)
+        assert n % 2 == 0
+        self.pairs = [(sim.instances[i], sim.instances[i + 1])
+                      for i in range(0, n, 2)]
+        self.pair_of = {}
+        for pa, pb in self.pairs:
+            self.pair_of[pa.iid] = (pa, pb)
+            self.pair_of[pb.iid] = (pa, pb)
+
+    def partner(self, inst: SimInstance) -> SimInstance:
+        pa, pb = self.pair_of[inst.iid]
+        return pb if inst is pa else pa
+
+    # -- routing: pair with most free memory (§4.2.2) -----------------------
+    def route(self, req):
+        def pair_free(p):
+            return p[0].mem_free() + p[1].mem_free()
+        pair = max(self.pairs, key=pair_free)
+        # inside the pair, prefill lands on the less decode-loaded side
+        pa, pb = pair
+        return pa if len(pa.decode_batch) <= len(pb.decode_batch) else pb
+
+    # -- dynamic roles ---------------------------------------------------------
+    def next_action(self, inst):
+        if inst.prefill_queue:
+            take = []
+            while (inst.prefill_queue and len(take) < MAX_PREFILL_BATCH
+                   and _fits(inst, inst.prefill_queue[0])):
+                take.append(inst.prefill_queue.pop(0))
+            if not take:
+                self._evict_replica(inst)  # memory pressure (§4.2.5)
+                if inst.prefill_queue and _fits(inst, inst.prefill_queue[0]):
+                    take = [inst.prefill_queue.pop(0)]
+            if take:
+                # before flipping to prefill, hand this side's decode work
+                # to the partner via replica promotion (zero cost) so token
+                # generation never stalls — the crux of §4.1.1/Fig. 6.
+                self._handoff_decodes(inst)
+                return ("prefill", take)
+        if inst.decode_batch:
+            return ("decode",)
+        return None
+
+    def _handoff_decodes(self, inst):
+        partner = self.partner(inst)
+        if partner.busy and partner._running and partner._running[0] != "decode":
+            return
+        for rid in list(inst.decode_batch):
+            pl = self.placement.get(rid, (None, None))
+            if pl[1] != partner.iid:
+                continue  # no replica on partner: this request must stall
+            r = inst.decode_batch.pop(rid)
+            partner.decode_batch[rid] = r
+            partner.replicas.pop(rid, None)
+            inst.replicas[rid] = r
+            self.placement[rid] = (partner.iid, inst.iid)
+        self.sim.kick(partner)
+
+    def on_prefill_done(self, inst, reqs):
+        partner = self.partner(inst)
+        for r in reqs:
+            if r.done:
+                r.finish_time = self.sim.now
+                self.sim.finished.append(r)
+                continue
+            # per-layer streamed during prefill (§4.2.4): transfer already
+            # overlapped, the request joins the partner's decode batch now;
+            # the prefilling side retains its copy as the replica.
+            dst, rep = partner, inst
+            if len(dst.decode_batch) > len(inst.decode_batch) + 1:
+                dst, rep = inst, partner
+            dst.decode_batch[r.rid] = r
+            replica_iid = None
+            if self.redundancy and rep.mem_free() >= rep.perf.kv_bytes(
+                    r.total_len):
+                rep.replicas[r.rid] = r
+                replica_iid = rep.iid
+            self.placement[r.rid] = (dst.iid, replica_iid)
+            dst.note_peak()
+            rep.note_peak()
+        self.sim.kick(partner)
+
+    # -- decode: mirror traffic may bound the step (Fig. 10) -------------------
+    def decode_step_time(self, inst):
+        t = inst.perf.decode_step_time(
+            [r.total_len for r in inst.decode_batch.values()])
+        if self.redundancy:
+            mirrored = sum(1 for rid in inst.decode_batch
+                           if self.placement.get(rid, (None, None))[1]
+                           is not None)
+            t_link = (inst.perf.mirror_bytes_per_step(mirrored)
+                      / inst.perf.inst.link_bw)
+            t = max(t, t_link)
+        return t
+
+    def on_decode_done(self, inst):
+        # drop replicas of finished requests
+        for r in list(self.sim.finished[-8:]):
+            pl = self.placement.pop(r.rid, None)
+            if pl and pl[1] is not None:
+                self.sim.instances[pl[1]].replicas.pop(r.rid, None)
+        self._rebalance(inst)
+
+    # -- load balancing by count + state bytes (§4.1.3) -------------------------
+    def _rebalance(self, inst):
+        pa, pb = self.pair_of[inst.iid]
+        if pa.busy or pb.busy:
+            return
+        items = []
+        for side, e in ((0, pa), (1, pb)):
+            for rid, r in e.decode_batch.items():
+                movable = self.placement.get(rid, (None, None))[1] is not None
+                items.append(Item(rid=rid, weight=e.perf.kv_bytes(r.total_len),
+                                  home=side, movable=movable))
+        if not should_rebalance(items):
+            return
+        _, _, moves = partition(items)
+        for rid, src_i, dst_i in moves:
+            src = (pa, pb)[src_i]
+            dst = (pa, pb)[dst_i]
+            r = src.decode_batch.pop(rid)
+            dst.decode_batch[rid] = r
+            # zero-cost: dst already held the replica; roles swap
+            dst.replicas.pop(rid, None)
+            src.replicas[rid] = r
+            self.placement[rid] = (dst.iid, src.iid)
+        self.sim.kick(pa)
+        self.sim.kick(pb)
+
+    def _evict_replica(self, inst):
+        if not inst.replicas:
+            return
+        rid = max(inst.replicas, key=lambda k: inst.replicas[k].total_len)
+        inst.replicas.pop(rid)
+        pl = self.placement.get(rid)
+        if pl:
+            self.placement[rid] = (pl[0], None)

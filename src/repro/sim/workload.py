@@ -1,0 +1,64 @@
+"""Workload generators (paper Table 2: uniform light / mixed / heavy)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+WORKLOADS = {
+    # name: (prefill lo-hi, decode lo-hi)  — paper Table 2
+    "light": ((20, 500), (20, 500)),
+    "mixed": ((20, 1000), (20, 1000)),
+    "heavy": ((500, 1000), (500, 1000)),
+}
+
+
+@dataclass
+class SimRequest:
+    rid: int
+    arrival: float
+    prompt_len: int
+    decode_len: int
+    # filled by the simulator
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+    generated: int = 0
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.decode_len
+
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival
+
+    def jct(self) -> float:
+        return self.finish_time - self.arrival
+
+    def tbts(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+
+def make_workload(name: str, rate: float, duration: float,
+                  seed: int = 0) -> List[SimRequest]:
+    """Poisson arrivals at ``rate`` req/s for ``duration`` seconds with
+    uniform prompt/decode lengths per the paper's Table 2."""
+    (plo, phi), (dlo, dhi) = WORKLOADS[name]
+    rng = np.random.default_rng(seed)
+    reqs: List[SimRequest] = []
+    t, rid = 0.0, 0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration:
+            break
+        reqs.append(SimRequest(
+            rid=rid, arrival=t,
+            prompt_len=int(rng.integers(plo, phi + 1)),
+            decode_len=int(rng.integers(dlo, dhi + 1))))
+        rid += 1
+    return reqs

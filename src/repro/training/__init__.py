@@ -1,0 +1,12 @@
+from repro.training.data import DataConfig, batches
+from repro.training.optimizer import (AdamWConfig, OptState, adamw_update,
+                                      init_opt_state)
+from repro.training.schedules import SCHEDULES, cosine, wsd
+from repro.training.train_step import (cross_entropy, loss_fn,
+                                       make_train_step, train_step)
+
+__all__ = [
+    "AdamWConfig", "OptState", "init_opt_state", "adamw_update",
+    "cosine", "wsd", "SCHEDULES", "DataConfig", "batches",
+    "cross_entropy", "loss_fn", "train_step", "make_train_step",
+]

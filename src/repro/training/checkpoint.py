@@ -1,0 +1,49 @@
+"""Minimal dependency-free checkpointing: pytree <-> .npz with path keys."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def walk(prefix: str, node: Any):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}", node[k])
+        elif isinstance(node, (list, tuple)):
+            tag = "T" if isinstance(node, tuple) else "L"
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{tag}{i}", v)
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk("", tree)
+    return flat
+
+
+def save(path: str, tree):
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **{k: v for k, v in flat.items()})
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def walk(prefix: str, node: Any):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}", node[k]) for k in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            tag = "T" if isinstance(node, tuple) else "L"
+            out = [walk(f"{prefix}/{tag}{i}", v) for i, v in enumerate(node)]
+            return tuple(out) if isinstance(node, tuple) else out
+        arr = data[prefix]
+        return jax.numpy.asarray(arr).astype(node.dtype).reshape(node.shape)
+
+    return walk("", like)

@@ -1,0 +1,28 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def wsd(step, *, warmup: int, total: int, decay_frac: float = 0.1,
+        min_frac: float = 0.01):
+    """Warmup -> Stable (flat) -> Decay (last ``decay_frac`` of steps,
+    exponential-ish linear-in-log decay per the MiniCPM recipe)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    decay_start = total * (1.0 - decay_frac)
+    prog = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                    0.0, 1.0)
+    decay = jnp.exp(jnp.log(jnp.maximum(min_frac, 1e-6)) * prog)
+    return warm * jnp.where(step < decay_start, 1.0, decay)
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}

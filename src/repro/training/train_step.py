@@ -1,0 +1,50 @@
+"""Training step: CE loss (+ router aux + optional MTP) and AdamW update."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits (B,S,V) f32, labels (B,S) int32 -> scalar mean NLL."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    inputs = dict(batch)
+    tokens = inputs.pop("tokens")
+    labels = inputs.pop("labels")
+    logits, aux = forward_train(cfg, params, {"tokens": tokens, **inputs})
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux
+    metrics = {"ce": ce, "router_aux": aux}
+    return loss, metrics
+
+
+def train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, params,
+               opt_state: OptState, batch: Dict[str, jax.Array],
+               lr_scale: jax.Array):
+    """One optimizer step; returns (params, opt_state, metrics)."""
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+    params, opt_state, gnorm = adamw_update(opt_cfg, params, grads,
+                                            opt_state, lr_scale)
+    metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    return functools.partial(train_step, cfg, opt_cfg)

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Smoke tests and benches see the single real CPU device; ONLY the dry-run
+# launcher sets xla_force_host_platform_device_count (per its module docs).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

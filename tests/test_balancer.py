@@ -1,0 +1,75 @@
+"""Property-based tests (hypothesis) for the AcceLLM load balancer."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.balancer import Item, imbalance, partition, should_rebalance
+
+items_strategy = st.lists(
+    st.tuples(st.floats(min_value=1.0, max_value=1e9),
+              st.integers(min_value=0, max_value=1),
+              st.booleans()),
+    min_size=0, max_size=40,
+).map(lambda rows: [Item(rid=i, weight=w, home=h, movable=m)
+                    for i, (w, h, m) in enumerate(rows)])
+
+
+@given(items_strategy)
+@settings(max_examples=200, deadline=None)
+def test_partition_conserves_requests(items):
+    s0, s1, moves = partition(items)
+    rids = {it.rid for it in items}
+    assert s0 | s1 == rids
+    assert s0 & s1 == set()
+
+
+@given(items_strategy)
+@settings(max_examples=200, deadline=None)
+def test_partition_respects_immovable(items):
+    s0, s1, moves = partition(items)
+    for it in items:
+        if not it.movable:
+            assert it.rid in (s0 if it.home == 0 else s1)
+    moved = {rid for rid, _, _ in moves}
+    for it in items:
+        if not it.movable:
+            assert it.rid not in moved
+
+
+@given(items_strategy)
+@settings(max_examples=200, deadline=None)
+def test_partition_count_balanced_when_all_movable(items):
+    movable = [Item(it.rid, it.weight, it.home, True) for it in items]
+    s0, s1, _ = partition(movable)
+    assert abs(len(s0) - len(s1)) <= 2
+
+
+@given(items_strategy)
+@settings(max_examples=200, deadline=None)
+def test_partition_never_worse_weight_balance_when_all_movable(items):
+    movable = [Item(it.rid, it.weight, it.home, True) for it in items]
+    if not movable:
+        return
+    _, dw_before = imbalance(movable)
+    s0, s1, _ = partition(movable)
+    w0 = sum(it.weight for it in movable if it.rid in s0)
+    w1 = sum(it.weight for it in movable if it.rid in s1)
+    # LPT greedy guarantee: final gap is at most the max single weight
+    assert abs(w0 - w1) <= max(it.weight for it in movable) + 1e-6
+
+
+@given(items_strategy)
+@settings(max_examples=100, deadline=None)
+def test_moves_are_consistent(items):
+    s0, s1, moves = partition(items)
+    for rid, src, dst in moves:
+        assert src != dst
+        assert rid in (s0 if dst == 0 else s1)
+
+
+def test_should_rebalance_triggers():
+    heavy = [Item(0, 100.0, 0, True), Item(1, 100.0, 0, True),
+             Item(2, 1.0, 1, True)]
+    assert should_rebalance(heavy)
+    balanced = [Item(0, 50.0, 0, True), Item(1, 50.0, 1, True)]
+    assert not should_rebalance(balanced)
+    assert not should_rebalance([])

@@ -1,0 +1,127 @@
+"""AcceLLM real-engine cluster: end-to-end behaviour + the migration
+invariant — tokens generated under redundancy/rebalancing must EXACTLY match
+a single-engine greedy run of the same request (zero-cost migration means
+bit-identical state)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import AcceLLMCluster
+from repro.models import init_params
+from repro.serving import InstanceEngine, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk_requests(cfg, n, seed=3):
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n):
+        plen = 6 + (i % 5)
+        toks = jax.random.randint(jax.random.fold_in(key, i), (1, plen),
+                                  0, cfg.vocab_size)
+        reqs.append(Request(prompt_len=plen, max_new_tokens=4 + (i % 4),
+                            prompt_tokens=toks))
+    return reqs
+
+
+def _single_engine_reference(cfg, params, req):
+    eng = InstanceEngine(cfg, params, num_slots=1, kv_capacity=128)
+    r = Request(prompt_len=req.prompt_len, max_new_tokens=req.max_new_tokens,
+                prompt_tokens=req.prompt_tokens)
+    eng.prefill_request(r)
+    while r.generated < r.max_new_tokens:
+        eng.decode()
+    return r.output_tokens
+
+
+def test_all_requests_finish(setup):
+    cfg, params = setup
+    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=6,
+                             kv_capacity=128)
+    reqs = _mk_requests(cfg, 8)
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=300)
+    assert len(done) == 8
+    for r in done:
+        assert len(r.output_tokens) == r.max_new_tokens
+        assert r.ttft() is not None and r.jct() is not None
+        assert r.ttft() <= r.jct()
+
+
+def test_migration_preserves_greedy_tokens(setup):
+    """The flagship invariant: redundancy-based migration is lossless."""
+    cfg, params = setup
+    reqs = _mk_requests(cfg, 6, seed=11)
+    expected = {r.rid: _single_engine_reference(cfg, params, r) for r in reqs}
+    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=8,
+                             kv_capacity=128)
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=300)
+    assert len(done) == len(reqs)
+    assert cluster.stats["replica_promotions"] > 0, \
+        "test should actually exercise migration"
+    for r in done:
+        assert r.output_tokens == expected[r.rid], (
+            f"rid {r.rid}: migrated tokens diverge from single-engine greedy")
+
+
+def test_no_redundancy_mode(setup):
+    cfg, params = setup
+    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=6,
+                             kv_capacity=128, redundancy=False)
+    reqs = _mk_requests(cfg, 4)
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=300)
+    assert len(done) == 4
+    assert cluster.stats["mirror_syncs"] == 0
+    assert cluster.stats["replica_promotions"] == 0
+
+
+def test_four_instances_two_pairs(setup):
+    cfg, params = setup
+    cluster = AcceLLMCluster(cfg, params, n_instances=4, num_slots=4,
+                             kv_capacity=128)
+    reqs = _mk_requests(cfg, 10, seed=5)
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=400)
+    assert len(done) == 10
+    # routing used both pairs
+    used = [len(p.placements) for p in cluster.pairs]
+    assert cluster.stats["prefills"] == 10
+
+
+def test_slot_accounting_invariants(setup):
+    """No slot is ever both primary and replica; bookkeeping stays closed."""
+    cfg, params = setup
+    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=5,
+                             kv_capacity=128)
+    reqs = _mk_requests(cfg, 7, seed=9)
+    for r in reqs:
+        cluster.submit(r)
+    steps = 0
+    while cluster.pending() and steps < 300:
+        cluster.step()
+        for eng in cluster.engines:
+            overlap = set(eng.slot_req) & set(eng.replica_of)
+            assert not overlap, f"slot is both primary and replica: {overlap}"
+        for pair in cluster.pairs:
+            for rid, pl in pair.placements.items():
+                inst, slot = pl.primary
+                eng = pair.engines()[inst]
+                assert eng.slot_req[slot].rid == rid
+                if pl.replica is not None:
+                    r_inst, r_slot = pl.replica
+                    assert pair.engines()[r_inst].replica_of.get(r_slot) \
+                        is not None
+        steps += 1

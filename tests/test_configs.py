@@ -1,0 +1,62 @@
+"""Config registry + parameter-count sanity."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_archs
+
+EXPECTED_PARAMS_B = {
+    "phi3-medium-14b": (13, 16),
+    "internvl2-1b": (0.3, 0.8),
+    "minicpm-2b": (2.0, 3.3),
+    "seamless-m4t-large-v2": (1.2, 2.5),
+    "starcoder2-3b": (2.7, 3.7),
+    "arctic-480b": (430, 520),
+    "xlstm-1.3b": (0.9, 2.2),
+    "deepseek-v3-671b": (620, 720),
+    "starcoder2-7b": (6.5, 8.2),
+    "jamba-1.5-large-398b": (350, 440),
+    "llama2-70b": (65, 72),
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(list_archs(include_extra=True)) == 11
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+
+
+@pytest.mark.parametrize("arch", list_archs(include_extra=True))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count() / 1e9
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.1f}B outside [{lo},{hi}]B"
+
+
+@pytest.mark.parametrize("arch", list_archs(include_extra=True))
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4
+    # reduced keeps one block of each distinct kind
+    assert set(r.block_pattern) <= set(get_config(arch).block_pattern)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_family_matches_blocks(arch):
+    cfg = get_config(arch)
+    kinds = set(cfg.block_pattern)
+    if cfg.family == "ssm":
+        assert "attn" not in kinds
+    if cfg.family == "hybrid":
+        assert {"attn", "mamba"} <= kinds
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        assert kinds == {"attn"}
+
+
+def test_moe_active_params_smaller():
+    for arch in ("arctic-480b", "deepseek-v3-671b", "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        assert cfg.param_count(active_only=True) < 0.5 * cfg.param_count()

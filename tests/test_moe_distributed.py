@@ -1,0 +1,54 @@
+"""Numeric validation of the shard_map MoE strategies (a2a / psum) against
+the single-device path, executed on 8 fake host devices in a subprocess
+(the device-count override must precede jax init, so it cannot run in this
+process — same constraint as the dry-run)."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro import sharding
+from repro.configs import get_config
+from repro.models.moe import init_moe, moe_forward
+
+cfg = get_config("arctic-480b").reduced()
+cfg = dataclasses.replace(
+    cfg, moe=dataclasses.replace(cfg.moe, num_experts=4, top_k=2,
+                                 capacity_factor=8.0))
+params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+routed = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
+B, S = 4, 8
+x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+
+# reference: local single-device
+y_ref, aux_ref = moe_forward(cfg, routed, x)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+for strategy, seq in (("a2a", True), ("psum", False)):
+    with sharding.use_mesh(mesh, batch_axes=("data",), model_axis="model",
+                           moe_strategy=strategy):
+        y, aux = jax.jit(lambda xx: moe_forward(cfg, routed, xx))(x)
+    err = float(jnp.abs(y - y_ref).max())
+    aerr = abs(float(aux) - float(aux_ref))
+    print(f"{strategy}: y_err={err:.2e} aux_err={aerr:.2e}")
+    assert err < 1e-4, f"{strategy} diverges: {err}"
+    # aux uses the standard per-device approximation (mean over shards of
+    # the per-shard sum f_e*P_e) — a quadratic statistic, so it differs
+    # from the global value by O(cross-shard covariance), not fp noise.
+    assert aerr < 5e-4, f"{strategy} aux diverges: {aerr}"
+print("DISTRIBUTED_MOE_OK")
+"""
+
+
+def test_moe_shard_map_strategies_match_local():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert "DISTRIBUTED_MOE_OK" in proc.stdout, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}")

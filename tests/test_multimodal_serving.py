@@ -1,0 +1,52 @@
+"""VLM / audio enc-dec requests through the full AcceLLM cluster (the
+modality-frontend carve-out feeds precomputed embeddings as request extras)."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import AcceLLMCluster
+from repro.models import init_params
+from repro.serving import Request
+
+
+def _serve(cfg, extras_fn, n=4):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=6,
+                             kv_capacity=128)
+    key = jax.random.PRNGKey(3)
+    for i in range(n):
+        plen = 6 + i
+        req = Request(prompt_len=plen, max_new_tokens=3 + i,
+                      prompt_tokens=jax.random.randint(
+                          jax.random.fold_in(key, i), (1, plen), 0,
+                          cfg.vocab_size))
+        cluster.submit(req, extras_fn(jax.random.fold_in(key, 100 + i)))
+    done = cluster.run(max_steps=200)
+    assert len(done) == n
+    for r in done:
+        assert len(r.output_tokens) == r.max_new_tokens
+    return cluster
+
+
+def test_vlm_requests_through_cluster():
+    cfg = get_config("internvl2-1b").reduced()
+
+    def extras(key):
+        return {"patch_embeds": jax.random.normal(
+            key, (1, cfg.frontend.num_prefix_tokens, cfg.frontend.embed_dim))}
+
+    cluster = _serve(cfg, extras)
+    assert cluster.stats["mirror_syncs"] > 0
+
+
+def test_audio_encdec_requests_through_cluster():
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    frames = cfg.encoder.max_source_positions
+
+    def extras(key):
+        return {"frames": jax.random.normal(
+            key, (1, frames, cfg.frontend.embed_dim))}
+
+    cluster = _serve(cfg, extras)
+    # encoder output is replicated state: redundancy covers it too
+    assert cluster.stats["replica_promotions"] >= 0

@@ -1,0 +1,83 @@
+"""Roofline HLO parser: shape-byte math, wire factors, loop multipliers on a
+synthetic HLO module."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.analysis import (_group_size, _shape_bytes, _wire_bytes,
+                                     analytic_bytes, collective_bytes,
+                                     dot_flops, model_flops)
+
+FAKE_HLO = """\
+HloModule test
+
+%inner_body (arg.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte = f32[8,16]{1,0} get-tuple-element(%arg.1), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%gte), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%gte, %ar)
+}
+
+%cond (arg.2: (s32[], f32[8,16])) -> pred[] {
+  %arg.2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  ROOT %p = pred[] constant(true)
+}
+
+ENTRY %main (p0: f32[8,32], p1: f32[32,16]) -> f32[8,16] {
+  %p0 = f32[8,32]{1,0} parameter(0)
+  %p1 = f32[32,16]{1,0} parameter(1)
+  %d = f32[8,16]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,64]{1,0} all-gather(%p0), channel_id=2, replica_groups=[128,2]<=[256], dimensions={1}
+  %w = (s32[], f32[8,16]{1,0}) while(%tpl), condition=%cond, body=%inner_body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %r = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], bf16[4])") == 16 + 8
+
+
+def test_wire_factors():
+    assert _wire_bytes("all-gather", 100, 2) == 50.0
+    assert _wire_bytes("all-reduce", 100, 2) == 100.0
+    assert _wire_bytes("collective-permute", 100, 99) == 100.0
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
+
+
+def test_collective_bytes_loop_multiplier():
+    total, by_kind = collective_bytes(FAKE_HLO)
+    # all-reduce inside while body: 8*16*4 bytes * 2 * 15/16 * 10 trips
+    ar = 8 * 16 * 4 * 2 * (15 / 16) * 10
+    ag = 8 * 64 * 4 * (1 / 2)
+    assert by_kind["all-reduce"] == pytest.approx(ar)
+    assert by_kind["all-gather"] == pytest.approx(ag)
+    assert total == pytest.approx(ar + ag)
+
+
+def test_dot_flops_from_hlo():
+    # one dot in entry: 2 * 8*16 * 32
+    assert dot_flops(FAKE_HLO) == pytest.approx(2 * 8 * 16 * 32)
+
+
+def test_model_flops_formulas():
+    cfg = get_config("deepseek-v3-671b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    n_act = cfg.param_count(active_only=True)
+    assert tr == pytest.approx(6 * n_act * 256 * 4096)
+    assert de == pytest.approx(2 * n_act * 128)
+
+
+def test_analytic_bytes_sane():
+    cfg = get_config("phi3-medium-14b")
+    d = analytic_bytes(cfg, INPUT_SHAPES["decode_32k"])
+    # decode per chip must at least stream the TP weight shard
+    assert d >= cfg.param_count() * 2 / 16
+    t = analytic_bytes(cfg, INPUT_SHAPES["train_4k"])
+    assert t > d
