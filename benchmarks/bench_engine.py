@@ -6,8 +6,8 @@ import time
 import jax
 
 from benchmarks.common import emit
+from repro.api import ServeSpec, serve
 from repro.configs import get_config
-from repro.core import AcceLLMCluster
 from repro.models import init_params
 from repro.serving import InstanceEngine, Request
 
@@ -50,17 +50,17 @@ def main():
     eng2.import_slot(0, ex, eng.slot_req[slot], as_replica_of=(0, slot))
     emit("engine_import_replica", (time.perf_counter() - t0) * 1e6,
          "replica install")
-    # cluster end-to-end
-    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=8,
-                             kv_capacity=256)
-    for i in range(6):
-        cluster.submit(mk(10 + i))
+    # cluster end-to-end through the unified facade
+    spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
+                     num_slots=8, kv_capacity=256, max_steps=200)
+    reqs = [mk(10 + i) for i in range(6)]
     t0 = time.perf_counter()
-    done = cluster.run(max_steps=200)
+    report = serve(spec, requests=reqs, cfg=cfg, params=params)
     us = (time.perf_counter() - t0) * 1e6
     emit("engine_cluster_6req_e2e", us,
-         f"finished={len(done)};rebalances={cluster.stats['rebalances']};"
-         f"promotions={cluster.stats['replica_promotions']}")
+         f"finished={len(report.finished)};"
+         f"rebalances={report.stats['rebalances']};"
+         f"promotions={report.stats['replica_promotions']}")
 
 
 if __name__ == "__main__":

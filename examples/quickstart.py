@@ -1,5 +1,6 @@
 """Quickstart: load an architecture, run prefill + a few decode steps, and
-show the AcceLLM redundancy primitives on a single pair of instances.
+show the AcceLLM redundancy primitives on a single pair of instances —
+then serve a small batch through the unified ``repro.api.serve`` facade.
 
 Run: PYTHONPATH=src python examples/quickstart.py [--arch starcoder2-3b]
 """
@@ -8,6 +9,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.api import ServeSpec, serve
 from repro.configs import get_config, list_archs
 from repro.core.kvbytes import state_bytes_at
 from repro.models import init_params
@@ -58,6 +60,16 @@ def main():
     print(f"finished on instance 0 after zero-cost migration: "
           f"tokens={req.output_tokens}")
     assert len(req.output_tokens) == req.max_new_tokens
+
+    # the same mechanism, end to end: one pair under the full AcceLLM
+    # policy via the unified serving facade
+    spec = ServeSpec(arch=args.arch, policy="accellm", n_instances=2,
+                     num_slots=4, kv_capacity=128, n_requests=4,
+                     max_steps=200)
+    report = serve(spec, cfg=cfg, params=params)
+    print(f"facade run: finished {len(report.finished)}/4, "
+          f"stats={report.stats}")
+    assert report.all_finished
     print("OK")
 
 

@@ -1,18 +1,21 @@
 """End-to-end driver (deliverable b): serve a small model with batched
-requests through the full AcceLLM cluster — pairs, dynamic roles, redundant
-KV, per-layer streaming, load balancing — and report TTFT/TBT/JCT.
+requests through the unified ``repro.api.serve`` facade — pairs, dynamic
+roles, redundant KV, per-layer streaming, load balancing — and report
+TTFT/TBT/JCT.  Any registered policy (accellm / vllm / splitwise /
+sarathi) runs on the same live engines.
 
 Run: PYTHONPATH=src python examples/serve_cluster.py \
-        [--arch phi3-medium-14b] [--requests 12] [--instances 4]
+        [--arch phi3-medium-14b] [--requests 12] [--instances 4] \
+        [--policy accellm]
 """
 import argparse
 
 import jax
 import numpy as np
 
+from repro.api import ServeSpec, serve
 from repro.configs import get_config, list_archs
-from repro.core import AcceLLMCluster
-from repro.models import init_params
+from repro.scheduling.registry import policy_names
 from repro.serving import Request
 
 
@@ -21,38 +24,31 @@ def main():
     ap.add_argument("--arch", default="phi3-medium-14b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--policy", default="accellm", choices=policy_names())
     ap.add_argument("--no-redundancy", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    cluster = AcceLLMCluster(cfg, params, n_instances=args.instances,
-                             num_slots=8, kv_capacity=256,
-                             redundancy=not args.no_redundancy)
     key = jax.random.PRNGKey(42)
     rng = np.random.default_rng(0)
+    reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(8, 48))
-        req = Request(
+        reqs.append(Request(
             prompt_len=plen, max_new_tokens=int(rng.integers(4, 16)),
             prompt_tokens=jax.random.randint(
-                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size))
-        cluster.submit(req)
+                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size)))
 
-    done = cluster.run(max_steps=500)
-    assert len(done) == args.requests, "not all requests completed"
+    spec = ServeSpec(arch=args.arch, policy=args.policy,
+                     n_instances=args.instances, num_slots=8,
+                     kv_capacity=256, redundancy=not args.no_redundancy,
+                     max_steps=500)
+    report = serve(spec, requests=reqs, cfg=cfg)
+    assert report.all_finished, "not all requests completed"
 
-    ttfts = [r.ttft() for r in done]
-    jcts = [r.jct() for r in done]
-    tbts = [t for r in done for t in r.tbts()]
-    print(f"finished {len(done)}/{args.requests} requests on "
-          f"{args.instances} instances ({len(cluster.pairs)} pairs)")
-    print(f"TTFT (iters): p50={np.percentile(ttfts, 50):.1f} "
-          f"max={max(ttfts):.1f}")
-    print(f"TBT  (iters): mean={np.mean(tbts):.2f} worst={max(tbts):.1f}")
-    print(f"JCT  (iters): p50={np.percentile(jcts, 50):.1f} "
-          f"max={max(jcts):.1f}")
-    print("scheduler stats:", cluster.stats)
+    print(f"finished {len(report.finished)}/{args.requests} requests on "
+          f"{args.instances} instances with policy={args.policy}")
+    print(report.describe())
 
 
 if __name__ == "__main__":

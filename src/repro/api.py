@@ -1,0 +1,157 @@
+"""Unified serving entry point: ``repro.api.serve(ServeSpec(...))``.
+
+One facade for every front-end (launchers, benchmarks, examples): builds
+the model, resolves the scheduling policy by name from
+``repro.scheduling.registry`` — so live engines can run the baseline
+policies (vllm / splitwise / sarathi) as well as AcceLLM — drives the
+request set through :class:`repro.scheduling.live.LiveCluster`, and
+returns latency metrics in scheduling iterations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.scheduling.live import LiveCluster
+from repro.scheduling.registry import get_policy, policy_accepts
+from repro.serving.request import Request
+from repro.sim.workload import WORKLOADS
+
+
+@dataclass
+class ServeSpec:
+    """Everything needed to stand up a live serving cluster."""
+    arch: str = "phi3-medium-14b"
+    policy: str = "accellm"
+    policy_kwargs: Dict = field(default_factory=dict)
+    n_instances: int = 4
+    num_slots: int = 8
+    kv_capacity: int = 256
+    redundancy: bool = True            # forwarded to redundancy-aware policies
+    reduced: bool = True               # CPU-sized variant of the architecture
+    temperature: float = 0.0
+    eos_token: Optional[int] = None
+    seed: int = 0
+    max_steps: int = 2000
+    # request sampling (used when serve() is not given explicit requests)
+    workload: str = "mixed"
+    n_requests: int = 16
+    request_scale: float = 0.05
+
+
+@dataclass
+class ServeReport:
+    """Outcome of a serve() run; latencies are in scheduling iterations."""
+    spec: ServeSpec
+    cluster: LiveCluster
+    finished: List[Request]
+    n_submitted: int
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.cluster.stats
+
+    @property
+    def all_finished(self) -> bool:
+        return len(self.finished) == self.n_submitted
+
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.ttft() for r in self.finished])
+
+    def jcts(self) -> np.ndarray:
+        return np.array([r.jct() for r in self.finished])
+
+    def tbts(self) -> np.ndarray:
+        flat = [t for r in self.finished for t in r.tbts()]
+        return np.array(flat or [0.0])
+
+    def describe(self) -> str:
+        lines = [f"finished {len(self.finished)}/{self.n_submitted}"]
+        if self.finished:
+            ttfts, jcts, tbts = self.ttfts(), self.jcts(), self.tbts()
+            lines += [
+                f"TTFT (iters): p50={np.percentile(ttfts, 50):.1f} "
+                f"p99={np.percentile(ttfts, 99):.1f}",
+                f"TBT  (iters): mean={tbts.mean():.2f} "
+                f"worst={tbts.max():.1f}",
+                f"JCT  (iters): p50={np.percentile(jcts, 50):.1f} "
+                f"p99={np.percentile(jcts, 99):.1f}",
+            ]
+        lines.append(f"stats: {self.stats}")
+        return "\n".join(lines)
+
+
+def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
+    """Resolve config, params and policy, and return a ready cluster."""
+    if cfg is None:
+        cfg = get_config(spec.arch)
+        if spec.reduced:
+            cfg = cfg.reduced()
+    if params is None:
+        params = init_params(jax.random.PRNGKey(spec.seed), cfg)
+    kwargs = dict(spec.policy_kwargs)
+    if policy_accepts(spec.policy, "redundancy"):
+        kwargs.setdefault("redundancy", spec.redundancy)
+    policy = get_policy(spec.policy, **kwargs)
+    return LiveCluster(cfg, params, spec.n_instances, spec.num_slots,
+                       spec.kv_capacity, policy,
+                       temperature=spec.temperature,
+                       eos_token=spec.eos_token)
+
+
+def sample_requests(cfg, n: int, workload: str, seed: int = 0,
+                    scale: float = 0.05
+                    ) -> List[Tuple[Request, Optional[dict]]]:
+    """Sample prompt/decode lengths from the paper's workload tables
+    (Table 2), scaled down for CPU-sized engines; attaches the modality
+    extras (vision patches / audio frames) the architecture needs."""
+    (plo, phi), (dlo, dhi) = WORKLOADS[workload]
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n):
+        plen = max(4, int(rng.integers(plo, phi + 1) * scale))
+        dlen = max(2, int(rng.integers(dlo, dhi + 1) * scale))
+        extra = None
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            extra = {"patch_embeds": jax.random.normal(
+                jax.random.fold_in(key, 1000 + i),
+                (1, cfg.frontend.num_prefix_tokens, cfg.frontend.embed_dim))}
+        elif cfg.is_encoder_decoder:
+            # frames length must equal the encoder memory capacity so the
+            # engine can merge the per-request state into its slot
+            extra = {"frames": jax.random.normal(
+                jax.random.fold_in(key, 1000 + i),
+                (1, cfg.encoder.max_source_positions,
+                 cfg.frontend.embed_dim))}
+        reqs.append((Request(
+            prompt_len=plen, max_new_tokens=dlen,
+            prompt_tokens=jax.random.randint(
+                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size)),
+            extra))
+    return reqs
+
+
+def serve(spec: ServeSpec,
+          requests: Optional[Sequence[Union[Request,
+                                            Tuple[Request, Optional[dict]]]]]
+          = None, cfg=None, params=None) -> ServeReport:
+    """Build the cluster, run the request set to completion, and report."""
+    cluster = build_cluster(spec, cfg=cfg, params=params)
+    if requests is None:
+        requests = sample_requests(cluster.cfg, spec.n_requests,
+                                   spec.workload, seed=spec.seed,
+                                   scale=spec.request_scale)
+    n = 0
+    for item in requests:
+        req, extra = item if isinstance(item, tuple) else (item, None)
+        cluster.submit(req, extra)
+        n += 1
+    finished = cluster.run(max_steps=spec.max_steps)
+    return ServeReport(spec=spec, cluster=cluster, finished=finished,
+                       n_submitted=n)

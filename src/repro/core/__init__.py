@@ -1,7 +1,11 @@
 """AcceLLM's contribution: redundant-KV instance pairs, dynamic roles,
-and state-bytes load balancing (scheduler + redundancy + balancer)."""
+and state-bytes load balancing (scheduler + redundancy + balancer).
+
+The cluster facade is loaded lazily (PEP 562) because
+``repro.core.cluster`` builds on ``repro.scheduling``, which itself uses
+the pure helpers below — a cycle if everything imported eagerly.
+"""
 from repro.core.balancer import Item, imbalance, partition, should_rebalance
-from repro.core.cluster import AcceLLMCluster, Pair, Placement
 from repro.core.kvbytes import (bytes_per_token, decode_read_bytes,
                                 fixed_state_bytes, state_bytes_at)
 
@@ -10,3 +14,12 @@ __all__ = [
     "should_rebalance", "bytes_per_token", "fixed_state_bytes",
     "state_bytes_at", "decode_read_bytes",
 ]
+
+_LAZY = ("AcceLLMCluster", "Pair", "Placement")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.core import cluster
+        return getattr(cluster, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

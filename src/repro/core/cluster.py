@@ -1,48 +1,38 @@
-"""AcceLLM cluster orchestrator over real InstanceEngines.
+"""AcceLLM cluster facade over the shared scheduling kernel.
 
-Implements the paper's §4 mechanism end-to-end on live JAX engines:
-  * instances organized in pairs (§4.2.1),
-  * the scheduling manager (§4.2.2): new requests go to the pair with the
-    most free memory; inside a pair the less-loaded instance flips to
-    prefill while its partner keeps decoding — never both phases on one
-    instance in one iteration,
-  * redundant KV caches (§4.1.2): after prefill the state streams to the
-    partner (which becomes the primary decoder) while the prefilling
-    instance *retains* its copy as the replica; during decode the newly
-    generated KV lines are mirrored back into the replica,
-  * load balancing (§4.1.3): when both instances decode, the pair's batch
-    is re-split by count and state-bytes using zero-cost replica promotion,
-  * graceful degradation (§4.2.5): replicas are evicted first under memory
-    pressure.
+The paper's §4 policy — pair routing, dynamic prefill/decode roles,
+redundant-KV placement, count+state-bytes rebalancing, replica eviction —
+lives in :class:`repro.scheduling.accellm.AcceLLMScheduler`; the mechanics
+of driving real JAX engines live in
+:class:`repro.scheduling.live.LiveCluster`.  This module keeps the
+historical ``AcceLLMCluster`` entry point as a thin facade over the two,
+plus the ``Pair``/``Placement`` structures older callers and tests use.
 
-The clock is the scheduling iteration (one decode step per active instance
-per iteration); latency metrics are reported in iterations. The discrete-
-event simulator in ``repro.sim`` maps the same policy onto wall-clock
-device models.
+New code should go through :func:`repro.api.serve`, which can also run the
+baseline policies (vllm / splitwise / sarathi) on live engines.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.balancer import Item, partition, should_rebalance
-from repro.core.kvbytes import decode_read_bytes
+from repro.scheduling.accellm import AcceLLMScheduler
+from repro.scheduling.live import LiveCluster, Placement
 from repro.serving.engine import InstanceEngine
-from repro.serving.request import Phase, Request
+
+__all__ = ["AcceLLMCluster", "Pair", "Placement"]
 
 
-@dataclass
-class Placement:
-    primary: Tuple[int, int]                 # (instance idx, slot)
-    replica: Optional[Tuple[int, int]] = None
-
-
-@dataclass
 class Pair:
-    a: InstanceEngine
-    b: InstanceEngine
-    placements: Dict[int, Placement] = field(default_factory=dict)  # rid ->
+    """Pair-local view of an instance pair (paper §4.2.1): exposes the
+    two engines and the pair's placements with within-pair indices."""
+
+    def __init__(self, a: InstanceEngine, b: InstanceEngine,
+                 cluster: LiveCluster):
+        self.a = a
+        self.b = b
+        self._cluster = cluster
 
     def engines(self):
         return (self.a, self.b)
@@ -50,211 +40,39 @@ class Pair:
     def free_capacity(self) -> int:
         return len(self.a.free_slots()) + len(self.b.free_slots())
 
-    def decode_items(self, cfg: ModelConfig) -> List[Item]:
-        items = []
-        for rid, pl in self.placements.items():
+    @property
+    def placements(self) -> Dict[int, Placement]:
+        local = {self.a.instance_id: 0, self.b.instance_id: 1}
+        out: Dict[int, Placement] = {}
+        for rid, pl in self._cluster.placements.items():
             inst, slot = pl.primary
-            eng = self.engines()[inst]
-            req = eng.slot_req.get(slot)
-            if req is None or req.phase is not Phase.DECODE:
+            if inst not in local:
                 continue
-            items.append(Item(
-                rid=rid,
-                weight=decode_read_bytes(cfg, req.total_len),
-                home=inst,
-                movable=pl.replica is not None))
-        return items
+            replica = None
+            if pl.replica is not None:
+                replica = (local[pl.replica[0]], pl.replica[1])
+            out[rid] = Placement(primary=(local[inst], slot), replica=replica)
+        return out
 
 
-class AcceLLMCluster:
+class AcceLLMCluster(LiveCluster):
+    """Deprecated construction shim: ``AcceLLMCluster(cfg, params, ...)``
+    still works but is now sugar for ``LiveCluster(...,
+    policy=AcceLLMScheduler(...))``; prefer ``repro.api.serve``."""
+
     def __init__(self, cfg: ModelConfig, params, n_instances: int,
                  num_slots: int, kv_capacity: int, *, redundancy: bool = True,
                  temperature: float = 0.0, eos_token: Optional[int] = None):
-        assert n_instances % 2 == 0, "AcceLLM organizes instances in pairs"
-        self.cfg = cfg
+        warnings.warn(
+            "AcceLLMCluster(...) is a compatibility facade; use "
+            "repro.api.serve(ServeSpec(...)) for new code",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, params, n_instances, num_slots, kv_capacity,
+                         policy=AcceLLMScheduler(redundancy=redundancy),
+                         temperature=temperature, eos_token=eos_token)
         self.redundancy = redundancy
-        self.engines = [
-            InstanceEngine(cfg, params, num_slots, kv_capacity,
-                           instance_id=i, temperature=temperature,
-                           eos_token=eos_token)
-            for i in range(n_instances)
-        ]
-        self.pairs = [Pair(self.engines[i], self.engines[i + 1])
-                      for i in range(0, n_instances, 2)]
-        self.queue: List[Tuple[Request, Optional[dict]]] = []
-        self.now = 0.0
-        self.finished: List[Request] = []
-        self._submitted = []
-        self.stats = {"prefills": 0, "decode_steps": 0, "rebalances": 0,
-                      "replica_promotions": 0, "replica_evictions": 0,
-                      "mirror_syncs": 0}
 
-    # -- submission -----------------------------------------------------------
-    def submit(self, req: Request, extra: Optional[dict] = None):
-        req.arrival = self.now
-        self.queue.append((req, extra))
-        self._submitted.append(req)
-
-    _submitted: List[Request]
-
-    # -- scheduling manager -----------------------------------------------------
-    def _route_pair(self) -> Optional[Pair]:
-        """Pair with the most free memory (paper §4.2.2)."""
-        candidates = [p for p in self.pairs if self._pair_can_accept(p)]
-        if not candidates:
-            return None
-        return max(candidates, key=lambda p: p.free_capacity())
-
-    def _pair_can_accept(self, pair: Pair) -> bool:
-        if any(e.free_slots() for e in pair.engines()):
-            return True
-        # memory pressure: a replica can be evicted to make room (§4.2.5)
-        return any(pl.replica is not None for pl in pair.placements.values())
-
-    def _make_room(self, pair: Pair) -> Optional[int]:
-        """Return engine index with a free slot, evicting a replica if needed."""
-        for i, e in enumerate(pair.engines()):
-            if e.free_slots():
-                return i
-        # evict the replica of the longest request (most bytes freed)
-        best = None
-        for rid, pl in pair.placements.items():
-            if pl.replica is not None:
-                if best is None or rid < best:
-                    best = rid
-        if best is None:
-            return None
-        pl = pair.placements[best]
-        inst, slot = pl.replica
-        pair.engines()[inst].release(slot)
-        pl.replica = None
-        self.stats["replica_evictions"] += 1
-        return inst
-
-    # -- one scheduling iteration -------------------------------------------------
-    def step(self):
-        self.now += 1.0
-        prefilling: Dict[int, bool] = {}
-
-        # 1. prefill routing: one request per pair per iteration
-        if self.queue:
-            pair = self._route_pair()
-            if pair is not None:
-                req, extra = self.queue.pop(0)
-                self._do_prefill(pair, req, extra, prefilling)
-
-        # 2. decode on every instance not prefilling this iteration
-        for pair in self.pairs:
-            for eng in pair.engines():
-                if prefilling.get(eng.instance_id):
-                    continue
-                # stamp token timing for requests decoded this iteration
-                live = [eng.slot_req[s] for s in eng.active_slots()]
-                if eng.decode():
-                    self.stats["decode_steps"] += 1
-                for req in live:
-                    req.token_times.append(self.now)
-            self._post_decode(pair)
-
-        # 4. mirror newly generated lines into replicas (§4.1.2)
-        if self.redundancy:
-            for pair in self.pairs:
-                self._mirror(pair)
-
-        # 5. pair-level load balancing via replica promotion (§4.1.3)
-        for pair in self.pairs:
-            self._rebalance(pair)
-
-    def _do_prefill(self, pair: Pair, req: Request, extra, prefilling):
-        side = self._make_room(pair)
-        if side is None:
-            self.queue.insert(0, (req, extra))
-            return
-        # dynamic role: the chosen side prefills, partner keeps decoding
-        pre_eng = pair.engines()[side]
-        partner_idx = 1 - side
-        partner = pair.engines()[partner_idx]
-        slot = pre_eng.prefill_request(req, extra)
-        req.phase = Phase.DECODE
-        req.first_token_time = self.now
-        req.token_times.append(self.now)
-        self.stats["prefills"] += 1
-        prefilling[pre_eng.instance_id] = True
-        placement = Placement(primary=(side, slot))
-        # stream state to the partner: partner becomes the primary decoder,
-        # the prefilling instance retains its copy as the replica (§4.1.2)
-        if self.redundancy and partner.free_slots():
-            psl = partner.free_slots()[0]
-            partner.import_slot(psl, pre_eng.export_slot(slot), req)
-            pre_eng.demote_to_replica(slot, of=(partner.instance_id, psl))
-            placement = Placement(primary=(partner_idx, psl),
-                                  replica=(side, slot))
-        pair.placements[req.rid] = placement
-
-    def _post_decode(self, pair: Pair):
-        """Release placements of finished requests (primary slot already
-        freed by the engine; drop the replica too)."""
-        for rid, pl in list(pair.placements.items()):
-            inst, slot = pl.primary
-            eng = pair.engines()[inst]
-            req = eng.slot_req.get(slot)
-            if req is None or req.rid != rid:        # finished & released
-                if pl.replica is not None:
-                    r_inst, r_slot = pl.replica
-                    pair.engines()[r_inst].release(r_slot)
-                del pair.placements[rid]
-
-    def _mirror(self, pair: Pair):
-        for rid, pl in pair.placements.items():
-            if pl.replica is None:
-                continue
-            p_inst, p_slot = pl.primary
-            r_inst, r_slot = pl.replica
-            src = pair.engines()[p_inst]
-            dst = pair.engines()[r_inst]
-            if p_slot in src.slot_req:
-                dst.sync_replica_from(src, p_slot, r_slot)
-                self.stats["mirror_syncs"] += 1
-
-    def _rebalance(self, pair: Pair):
-        items = pair.decode_items(self.cfg)
-        if not should_rebalance(items):
-            return
-        _, _, moves = partition(items)
-        for rid, src_i, dst_i in moves:
-            pl = pair.placements[rid]
-            if pl.replica is None:
-                continue
-            src = pair.engines()[src_i]
-            dst = pair.engines()[dst_i]
-            p_slot = pl.primary[1]
-            r_slot = pl.replica[1]
-            req = src.slot_req[p_slot]
-            # zero-cost migration: promote replica, demote primary
-            dst.promote_replica(r_slot, req)
-            src.demote_to_replica(p_slot, of=(dst.instance_id, r_slot))
-            pair.placements[rid] = Placement(primary=(dst_i, r_slot),
-                                             replica=(src_i, p_slot))
-            self.stats["replica_promotions"] += 1
-        if moves:
-            self.stats["rebalances"] += 1
-
-    # -- driver ---------------------------------------------------------------
-    def pending(self) -> int:
-        live = len(self.queue)
-        for pair in self.pairs:
-            live += len(pair.placements)
-        return live
-
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        steps = 0
-        while self.pending() and steps < max_steps:
-            self.step()
-            # stamp finish times for anything that completed this iteration
-            # (including requests that finish in their very first step)
-            for req in self._submitted:
-                if req.phase is Phase.DONE and req.finish_time is None:
-                    req.finish_time = self.now
-                    self.finished.append(req)
-            steps += 1
-        return self.finished
+    @property
+    def pairs(self) -> List[Pair]:
+        return [Pair(self.engines[i], self.engines[i + 1], self)
+                for i in range(0, len(self.engines), 2)]

@@ -1,59 +1,30 @@
-"""Serving launcher: drive the AcceLLM cluster on live engines.
+"""Serving launcher: drive a live-engine cluster under any registered
+scheduling policy through the ``repro.api.serve`` facade.
 
 CPU-runnable with reduced configs (default); on a real TPU fleet the same
 code paths run the full configs with the TP specs from launch/specs.py.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
-      --instances 4 --requests 16 [--no-redundancy] [--workload mixed]
+      --instances 4 --requests 16 [--policy accellm|vllm|splitwise|sarathi] \
+      [--no-redundancy] [--workload mixed]
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-import numpy as np
-
-from repro.configs import get_config, list_archs
-from repro.core import AcceLLMCluster
-from repro.models import init_params
-from repro.serving import Request
+from repro.api import ServeSpec, serve
+from repro.configs import list_archs
+from repro.scheduling.registry import policy_names
 from repro.sim.workload import WORKLOADS
-
-
-def build_requests(cfg, n, workload, seed=0, scale=0.05):
-    """Sample prompt/decode lengths from the paper's workload tables,
-    scaled down for the CPU-sized engines."""
-    (plo, phi), (dlo, dhi) = WORKLOADS[workload]
-    rng = np.random.default_rng(seed)
-    key = jax.random.PRNGKey(seed)
-    reqs = []
-    for i in range(n):
-        plen = max(4, int(rng.integers(plo, phi + 1) * scale))
-        dlen = max(2, int(rng.integers(dlo, dhi + 1) * scale))
-        extra = None
-        if cfg.frontend is not None and cfg.frontend.kind == "vision":
-            extra = {"patch_embeds": jax.random.normal(
-                jax.random.fold_in(key, 1000 + i),
-                (1, cfg.frontend.num_prefix_tokens, cfg.frontend.embed_dim))}
-        elif cfg.is_encoder_decoder:
-            # frames length must equal the encoder memory capacity so the
-            # engine can merge the per-request state into its slot
-            extra = {"frames": jax.random.normal(
-                jax.random.fold_in(key, 1000 + i),
-                (1, cfg.encoder.max_source_positions,
-                 cfg.frontend.embed_dim))}
-        reqs.append((Request(
-            prompt_len=plen, max_new_tokens=dlen,
-            prompt_tokens=jax.random.randint(
-                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size)),
-            extra))
-    return reqs
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-medium-14b", choices=list_archs())
+    ap.add_argument("--policy", default="accellm", choices=policy_names(),
+                    help="scheduling policy (shared kernel; the same names "
+                         "drive the simulator)")
     ap.add_argument("--instances", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
@@ -64,31 +35,16 @@ def main():
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if not args.full_config:
-        cfg = cfg.reduced()
-    print(f"serving {cfg.name} on {args.instances} instances "
-          f"({args.instances // 2} pairs), redundancy="
-          f"{not args.no_redundancy}")
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    cluster = AcceLLMCluster(
-        cfg, params, n_instances=args.instances, num_slots=args.slots,
-        kv_capacity=args.kv_capacity, redundancy=not args.no_redundancy)
-    for r, extra in build_requests(cfg, args.requests, args.workload):
-        cluster.submit(r, extra)
-    done = cluster.run(max_steps=2000)
-
-    ttfts = [r.ttft() for r in done]
-    jcts = [r.jct() for r in done]
-    tbts = [t for r in done for t in r.tbts()] or [0.0]
-    print(f"finished {len(done)}/{args.requests}")
-    print(f"TTFT (iters): p50={np.percentile(ttfts, 50):.1f} "
-          f"p99={np.percentile(ttfts, 99):.1f}")
-    print(f"TBT  (iters): mean={np.mean(tbts):.2f} worst={max(tbts):.1f}")
-    print(f"JCT  (iters): p50={np.percentile(jcts, 50):.1f} "
-          f"p99={np.percentile(jcts, 99):.1f}")
-    print("stats:", cluster.stats)
-    return 0 if len(done) == args.requests else 1
+    spec = ServeSpec(
+        arch=args.arch, policy=args.policy, n_instances=args.instances,
+        num_slots=args.slots, kv_capacity=args.kv_capacity,
+        redundancy=not args.no_redundancy, reduced=not args.full_config,
+        workload=args.workload, n_requests=args.requests)
+    print(f"serving {args.arch} on {args.instances} instances "
+          f"with policy={args.policy}, redundancy={spec.redundancy}")
+    report = serve(spec)
+    print(report.describe())
+    return 0 if report.all_finished else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Backend-agnostic AcceLLM scheduling: one policy kernel, two executors.
+
+  views      — ClusterView / InstanceView protocols (state the policy sees)
+  actions    — declarative actions the policy emits
+  base       — the SchedulerPolicy interface
+  accellm    — the paper's policy kernel (§4.1–§4.2)
+  baselines  — vLLM / Sarathi / Splitwise kernels
+  registry   — name -> policy factory for CLIs and repro.api
+  live       — executor over real InstanceEngines
+
+The simulator-side executor lives in ``repro.sim.policies`` (adapters that
+map the same kernels onto the discrete-event cost model).
+"""
+from repro.scheduling.accellm import AcceLLMScheduler
+from repro.scheduling.actions import (Action, Decode, EvictReplica,
+                                      MirrorSync, Prefill, PromoteReplica,
+                                      StreamState)
+from repro.scheduling.base import MAX_PREFILL_BATCH, SchedulerPolicy
+from repro.scheduling.baselines import (SarathiScheduler, SplitwiseScheduler,
+                                        VLLMScheduler)
+from repro.scheduling.live import LiveCluster, Placement
+from repro.scheduling.registry import get_policy, policy_names, register_policy
+from repro.scheduling.views import ClusterView, InstanceView, RequestView
+
+__all__ = [
+    "Action", "Prefill", "Decode", "StreamState", "MirrorSync",
+    "PromoteReplica", "EvictReplica",
+    "ClusterView", "InstanceView", "RequestView",
+    "SchedulerPolicy", "MAX_PREFILL_BATCH",
+    "AcceLLMScheduler", "VLLMScheduler", "SplitwiseScheduler",
+    "SarathiScheduler",
+    "LiveCluster", "Placement",
+    "get_policy", "policy_names", "register_policy",
+]

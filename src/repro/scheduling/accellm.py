@@ -1,0 +1,194 @@
+"""The AcceLLM scheduling kernel (paper §4.1–§4.2) — one implementation
+shared by the live-engine executor and the simulator adapter.
+
+Decisions made here, and only here:
+
+  * routing (§4.2.2): new requests go to the pair with the most free
+    memory; inside the pair, the less decode-loaded side prefills,
+  * dynamic roles (§4.2.3): prefill and decode are never co-scheduled on
+    one instance in one iteration,
+  * placement (§4.1.2): after prefill the state streams to the partner
+    (which becomes the primary decoder) while the prefilling side retains
+    its copy as the replica — unless the partner is already markedly more
+    loaded, in which case the roles invert,
+  * mirroring (§4.1.2): newly generated KV lines sync into replicas,
+  * balancing (§4.1.3): decode batches re-split by count + state bytes via
+    zero-cost replica promotion,
+  * eviction (§4.2.5): under memory pressure the replica freeing the most
+    bytes (the longest request's) is dropped first.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.balancer import Item, partition, should_rebalance
+from repro.scheduling.actions import (Action, EvictReplica, MirrorSync,
+                                      PromoteReplica, StreamState)
+from repro.scheduling.base import (ROLE_DECODE, ROLE_IDLE, ROLE_PREFILL,
+                                   SchedulerPolicy)
+from repro.scheduling.views import ClusterView, InstanceView, RequestView
+
+PairView = Tuple[InstanceView, InstanceView]
+
+
+class AcceLLMScheduler(SchedulerPolicy):
+    name = "accellm"
+    requires_pairs = True
+    requeue_unplaced = True
+
+    def __init__(self, redundancy: bool = True, swap_margin: int = 1):
+        self.redundancy = redundancy
+        #: the partner only loses the primary role when it is more than
+        #: ``swap_margin`` requests ahead of the prefilling side
+        self.swap_margin = swap_margin
+        #: optional decision log (golden-trace consistency tests)
+        self.trace: Optional[list] = None
+
+    def _note(self, *entry):
+        if self.trace is not None:
+            self.trace.append(entry)
+
+    # -- routing (§4.2.2) ---------------------------------------------------
+    def admissions_per_step(self, cluster: ClusterView) -> int:
+        return 1
+
+    def route(self, cluster: ClusterView, req: RequestView) -> Optional[int]:
+        eligible = [p for p in cluster.pairs() if self._pair_can_accept(p, req)]
+        if not eligible:
+            return None
+        pair = max(eligible,
+                   key=lambda p: p[0].mem_free() + p[1].mem_free())
+        side = self.choose_prefill_side(pair, req)
+        if side is None:
+            return None
+        target = pair[side].index
+        self._note("route", req.rid, target)
+        return target
+
+    def _pair_can_accept(self, pair: PairView, req: RequestView) -> bool:
+        if any(v.can_admit(req) for v in pair):
+            return True
+        # memory pressure: a replica can be evicted to make room (§4.2.5)
+        if any(v.replica_weights() for v in pair):
+            return True
+        return any(v.can_queue() for v in pair)
+
+    # -- dynamic roles (§4.2.3) ---------------------------------------------
+    def choose_prefill_side(self, pair: PairView, req: RequestView
+                            ) -> Optional[int]:
+        open_sides = [s for s in (0, 1) if pair[s].can_admit(req)]
+        if not open_sides:
+            victims = self._eviction_victims(pair, need=1)
+            if victims:
+                open_sides = [s for s in (0, 1)
+                              if pair[s].index == victims[0].instance]
+            elif any(v.can_queue() for v in pair):
+                open_sides = [s for s in (0, 1) if pair[s].can_queue()]
+            else:
+                return None
+        return min(open_sides, key=lambda s: (pair[s].decode_load(), s))
+
+    def choose_roles(self, cluster: ClusterView, instance: int) -> str:
+        inst = cluster.instances()[instance]
+        if inst.prefill_backlog():
+            return ROLE_PREFILL          # never co-scheduled with decode
+        return ROLE_DECODE if inst.decode_load() else ROLE_IDLE
+
+    def prefill_batch(self, cluster: ClusterView, instance: int,
+                      pending: Sequence[RequestView]) -> int:
+        inst = cluster.instances()[instance]
+        if pending and not inst.can_admit(pending[0]) \
+                and inst.replica_weights():
+            # memory pressure (§4.2.5): admit one request anyway — the
+            # executor frees its slot by evicting this instance's most
+            # expensive replica first
+            return 1
+        return super().prefill_batch(cluster, instance, pending)
+
+    # -- placement (§4.1.2) -------------------------------------------------
+    def place_after_prefill(self, cluster: ClusterView, instance: int,
+                            req: RequestView) -> List[Action]:
+        pair = next(p for p in cluster.pairs()
+                    if instance in (p[0].index, p[1].index))
+        side = 0 if pair[0].index == instance else 1
+
+        def load(s: int) -> int:
+            # exclude the request being placed (backends differ on whether
+            # it is already counted as resident at this point)
+            v = pair[s]
+            return v.decode_load() - (1 if req.rid in v.decode_weights()
+                                      else 0)
+
+        dst, rep = 1 - side, side
+        if load(dst) > load(rep) + self.swap_margin:
+            dst, rep = side, 1 - side
+        if dst != side and not pair[dst].can_hold_primary(req):
+            dst, rep = side, 1 - side
+
+        replica: Optional[int] = None
+        if self.redundancy and pair[rep].can_hold_replica(
+                req, resident=(rep == side)):
+            replica = pair[rep].index
+
+        actions: List[Action] = []
+        if dst != side:
+            actions.append(StreamState(req.rid, src=pair[side].index,
+                                       dst=pair[dst].index,
+                                       retain_replica=replica is not None))
+        elif replica is not None:
+            actions.append(StreamState(req.rid, src=pair[side].index,
+                                       dst=replica, as_replica=True))
+        self._note("place", req.rid, pair[dst].index, replica)
+        return actions
+
+    # -- mirroring (§4.1.2) -------------------------------------------------
+    def sync(self, cluster: ClusterView) -> List[Action]:
+        if not self.redundancy:
+            return []
+        return [MirrorSync(rid, primary, replica)
+                for rid, (primary, replica) in sorted(
+                    cluster.placements().items())
+                if replica is not None]
+
+    # -- balancing by count + state bytes (§4.1.3) --------------------------
+    def rebalance(self, cluster: ClusterView, pair_index: int
+                  ) -> List[Action]:
+        pair = cluster.pairs()[pair_index]
+        placements = cluster.placements()
+        items = []
+        for side, view in enumerate(pair):
+            partner_idx = pair[1 - side].index
+            for rid, weight in sorted(view.decode_weights().items()):
+                replica = placements.get(rid, (None, None))[1]
+                items.append(Item(rid=rid, weight=weight, home=side,
+                                  movable=replica == partner_idx))
+        if not should_rebalance(items):
+            return []
+        _, _, moves = partition(items)
+        actions = [PromoteReplica(rid, src=pair[src].index,
+                                  dst=pair[dst].index)
+                   for rid, src, dst in sorted(moves)]
+        if actions:
+            self._note("rebalance",
+                       tuple((a.rid, a.src, a.dst) for a in actions))
+        return actions
+
+    # -- graceful degradation (§4.2.5) --------------------------------------
+    def evict(self, cluster: ClusterView,
+              instances: Sequence[InstanceView], need: int = 1
+              ) -> List[Action]:
+        return self._eviction_victims(instances, need)
+
+    def _eviction_victims(self, instances: Sequence[InstanceView],
+                          need: int = 1) -> List[EvictReplica]:
+        candidates = [(weight, rid, view.index)
+                      for view in instances
+                      for rid, weight in view.replica_weights().items()]
+        # most bytes freed first (the longest request's replica); ties
+        # break toward the lowest rid for determinism across backends
+        candidates.sort(key=lambda c: (-c[0], c[1]))
+        victims = [EvictReplica(rid=rid, instance=idx)
+                   for _, rid, idx in candidates[:need]]
+        for v in victims:
+            self._note("evict", v.rid, v.instance)
+        return victims

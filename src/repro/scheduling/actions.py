@@ -1,0 +1,77 @@
+"""Declarative scheduling actions (the policy -> executor contract).
+
+A ``SchedulerPolicy`` never mutates engines or simulator state directly: it
+*describes* what should happen as a list of actions, and each backend's
+executor (``repro.scheduling.live`` for real JAX engines, the adapters in
+``repro.sim.policies`` for the discrete-event simulator) interprets them
+with its own mechanics and cost model.  Instance references are the global
+instance index, which is the same numbering on both backends
+(``InstanceEngine.instance_id`` / ``SimInstance.iid``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Union
+
+
+@dataclass(frozen=True)
+class Prefill:
+    """Run the prompt of ``rid`` on ``instance``."""
+    rid: int
+    instance: int
+
+
+@dataclass(frozen=True)
+class Decode:
+    """Run one decode iteration over ``instance``'s resident batch."""
+    instance: int
+
+
+@dataclass(frozen=True)
+class StreamState:
+    """Move or copy a request's serving state between instances
+    (AcceLLM §4.1.2 KV streaming; per-layer-overlapped on a real mesh).
+
+    ``as_replica``      — the copy lands on ``dst`` as a *replica*; the
+                          primary stays at ``src``.
+    ``retain_replica``  — the primary moves to ``dst`` and ``src`` keeps
+                          its copy as the replica.
+    Neither flag set    — plain primary migration (Splitwise-style
+                          post-prefill KV transfer); ``src`` releases.
+    """
+    rid: int
+    src: int
+    dst: int
+    as_replica: bool = False
+    retain_replica: bool = False
+
+
+@dataclass(frozen=True)
+class MirrorSync:
+    """Mirror the newly generated KV line(s) of ``rid`` from its primary
+    into its replica (AcceLLM §4.1.2)."""
+    rid: int
+    primary: int
+    replica: int
+
+
+@dataclass(frozen=True)
+class PromoteReplica:
+    """Zero-cost role flip (AcceLLM §4.1.3): the replica of ``rid`` on
+    ``dst`` becomes the primary; the old primary on ``src`` becomes the
+    replica."""
+    rid: int
+    src: int
+    dst: int
+
+
+@dataclass(frozen=True)
+class EvictReplica:
+    """Drop the replica of ``rid`` held on ``instance`` to free memory
+    (graceful degradation, AcceLLM §4.2.5)."""
+    rid: int
+    instance: int
+
+
+Action = Union[Prefill, Decode, StreamState, MirrorSync, PromoteReplica,
+               EvictReplica]

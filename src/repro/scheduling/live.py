@@ -1,0 +1,360 @@
+"""Live-engine executor: drives real ``InstanceEngine``s under any
+``SchedulerPolicy``.
+
+This replaces the scheduling logic that used to be hardwired into
+``repro.core.cluster.AcceLLMCluster``: the executor owns the mechanics
+(engines, slots, the iteration clock, placement bookkeeping) and asks the
+policy kernel for every decision, applying the declarative actions it
+returns.  The same kernel object drives the discrete-event simulator via
+the adapters in ``repro.sim.policies``.
+
+The clock is the scheduling iteration (one decode step per active
+instance per iteration); latency metrics are reported in iterations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.configs.base import ModelConfig
+from repro.core.kvbytes import decode_read_bytes, state_bytes_at
+from repro.scheduling.actions import (Action, EvictReplica, MirrorSync,
+                                      PromoteReplica, StreamState)
+from repro.scheduling.base import ROLE_MIXED, ROLE_PREFILL, SchedulerPolicy
+from repro.serving.engine import InstanceEngine
+from repro.serving.request import Phase, Request
+
+
+@dataclass
+class Placement:
+    """Where a request's state lives: (instance index, slot)."""
+    primary: Tuple[int, int]
+    replica: Optional[Tuple[int, int]] = None
+
+
+class LiveInstanceView:
+    """InstanceView over one live engine (see repro.scheduling.views)."""
+
+    def __init__(self, cluster: "LiveCluster", index: int):
+        self._c = cluster
+        self._eng = cluster.engines[index]
+        self._index = index
+
+    @property
+    def index(self) -> int:
+        return self._index
+
+    # -- capacity ------------------------------------------------------------
+    def free_slots(self) -> int:
+        return len(self._eng.free_slots())
+
+    def mem_free(self) -> float:
+        cfg = self._c.cfg
+        capacity = self._eng.num_slots * state_bytes_at(
+            cfg, self._eng.kv_capacity)
+        used = sum(state_bytes_at(cfg, req.total_len)
+                   for req in self._eng.slot_req.values())
+        used += sum(state_bytes_at(cfg, req.total_len)
+                    for rid, req in self._replica_reqs())
+        return capacity - used
+
+    def can_admit(self, req, taking: int = 0) -> bool:
+        return self.free_slots() > taking
+
+    def can_hold_primary(self, req, resident: bool = False) -> bool:
+        return resident or self.free_slots() > 0
+
+    def can_hold_replica(self, req, resident: bool = False) -> bool:
+        return resident or self.free_slots() > 0
+
+    def can_queue(self) -> bool:
+        return False
+
+    # -- load ----------------------------------------------------------------
+    def decode_load(self) -> int:
+        return len(self._eng.slot_req)
+
+    def prefill_backlog(self) -> int:
+        return len(self._c._pending[self._index])
+
+    def prefill_backlog_tokens(self) -> int:
+        return sum(req.prompt_len
+                   for req, _ in self._c._pending[self._index])
+
+    def decode_weights(self) -> Dict[int, float]:
+        cfg = self._c.cfg
+        return {req.rid: decode_read_bytes(cfg, req.total_len)
+                for req in self._eng.slot_req.values()
+                if req.phase is Phase.DECODE}
+
+    def replica_weights(self) -> Dict[int, float]:
+        cfg = self._c.cfg
+        return {rid: decode_read_bytes(cfg, req.total_len)
+                for rid, req in self._replica_reqs()}
+
+    def _replica_reqs(self):
+        for rid, pl in self._c.placements.items():
+            if pl.replica is not None and pl.replica[0] == self._index:
+                yield rid, self._c._reqs[rid]
+
+
+class LiveClusterView:
+    """ClusterView over a LiveCluster (see repro.scheduling.views)."""
+
+    def __init__(self, cluster: "LiveCluster"):
+        self._c = cluster
+        self._views = [LiveInstanceView(cluster, i)
+                       for i in range(len(cluster.engines))]
+
+    def instances(self):
+        return self._views
+
+    def pairs(self):
+        return [(self._views[i], self._views[i + 1])
+                for i in range(0, len(self._views) - 1, 2)]
+
+    def placements(self) -> Dict[int, Tuple[int, Optional[int]]]:
+        return {rid: (pl.primary[0],
+                      pl.replica[0] if pl.replica is not None else None)
+                for rid, pl in self._c.placements.items()}
+
+
+class LiveCluster:
+    """Policy-driven orchestrator over real InstanceEngines."""
+
+    def __init__(self, cfg: ModelConfig, params, n_instances: int,
+                 num_slots: int, kv_capacity: int,
+                 policy: Union[SchedulerPolicy, str], *,
+                 temperature: float = 0.0, eos_token: Optional[int] = None):
+        if isinstance(policy, str):
+            from repro.scheduling.registry import get_policy
+            policy = get_policy(policy)
+        if policy.requires_pairs:
+            assert n_instances % 2 == 0, \
+                f"{policy.name} organizes instances in pairs"
+        self.cfg = cfg
+        self.policy = policy
+        self.engines = [
+            InstanceEngine(cfg, params, num_slots, kv_capacity,
+                           instance_id=i, temperature=temperature,
+                           eos_token=eos_token)
+            for i in range(n_instances)
+        ]
+        self.queue: List[Tuple[Request, Optional[dict]]] = []
+        self._pending: List[List[Tuple[Request, Optional[dict]]]] = [
+            [] for _ in range(n_instances)]
+        self.placements: Dict[int, Placement] = {}
+        self._reqs: Dict[int, Request] = {}
+        self.now = 0.0
+        self.finished: List[Request] = []
+        self._submitted: List[Request] = []
+        self.stats = {"prefills": 0, "decode_steps": 0, "rebalances": 0,
+                      "replica_promotions": 0, "replica_evictions": 0,
+                      "mirror_syncs": 0}
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, req: Request, extra: Optional[dict] = None):
+        req.arrival = self.now
+        self.queue.append((req, extra))
+        self._submitted.append(req)
+
+    # -- one scheduling iteration ---------------------------------------------
+    def step(self):
+        self.now += 1.0
+        view = LiveClusterView(self)
+
+        # 1. routing: policy assigns queued requests to instances
+        admitted = 0
+        limit = self.policy.admissions_per_step(view)
+        while self.queue and admitted < limit:
+            req, extra = self.queue[0]
+            target = self.policy.route(view, req)
+            if target is None:
+                break
+            self.queue.pop(0)
+            self._pending[target].append((req, extra))
+            admitted += 1
+
+        # 2. roles + prefill
+        roles = {i: self.policy.choose_roles(view, i)
+                 for i in range(len(self.engines))}
+        exclusive_prefill = set()
+        newly: List[Tuple[int, Request]] = []
+        for idx, eng in enumerate(self.engines):
+            if roles[idx] not in (ROLE_PREFILL, ROLE_MIXED):
+                continue
+            if not self._pending[idx]:
+                continue
+            n = self.policy.prefill_batch(
+                view, idx, [r for r, _ in self._pending[idx]])
+            did = False
+            for _ in range(n):
+                req, extra = self._pending[idx][0]
+                if not eng.free_slots():
+                    for act in self.policy.evict(view, [view.instances()[idx]]):
+                        self._apply(act)
+                if not eng.free_slots():
+                    break
+                self._pending[idx].pop(0)
+                slot = eng.prefill_request(req, extra)
+                req.first_token_time = self.now
+                req.token_times.append(self.now)
+                self.placements[req.rid] = Placement(primary=(idx, slot))
+                self._reqs[req.rid] = req
+                self.stats["prefills"] += 1
+                did = True
+                if req.done:          # degenerate max_new_tokens == 1
+                    req.phase = Phase.DONE
+                    eng.release(slot)
+                    continue
+                newly.append((idx, req))
+            if did and roles[idx] == ROLE_PREFILL:
+                exclusive_prefill.add(idx)
+
+        # 3. post-prefill placement (§4.1.2 streaming / Splitwise transfer)
+        for idx, req in newly:
+            for act in self.policy.place_after_prefill(view, idx, req):
+                self._apply(act)
+
+        # 4. decode on every instance not exclusively prefilling
+        for idx, eng in enumerate(self.engines):
+            if idx in exclusive_prefill or not eng.slot_req:
+                continue
+            live = [eng.slot_req[s] for s in eng.active_slots()]
+            if eng.decode():
+                self.stats["decode_steps"] += 1
+            for req in live:
+                req.token_times.append(self.now)
+
+        # 5. release placements of finished requests
+        self._release_finished()
+
+        # 6. mirror newly generated lines into replicas (§4.1.2)
+        for act in self.policy.sync(view):
+            self._apply(act)
+
+        # 7. pair-level load balancing via replica promotion (§4.1.3)
+        if self.policy.requires_pairs:
+            for pair_index in range(len(self.engines) // 2):
+                acts = self.policy.rebalance(view, pair_index)
+                for act in acts:
+                    self._apply(act)
+                if acts:
+                    self.stats["rebalances"] += 1
+
+        # 8. policies that re-route every iteration reclaim their backlog
+        if self.policy.requeue_unplaced:
+            stranded = [item for pending in self._pending for item in pending]
+            if stranded:
+                for pending in self._pending:
+                    pending.clear()
+                self.queue[:0] = stranded
+
+    # -- action interpreter ---------------------------------------------------
+    def _apply(self, act: Action):
+        if isinstance(act, StreamState):
+            self._apply_stream(act)
+        elif isinstance(act, MirrorSync):
+            self._apply_mirror(act)
+        elif isinstance(act, PromoteReplica):
+            self._apply_promote(act)
+        elif isinstance(act, EvictReplica):
+            self._apply_evict(act)
+        else:
+            raise ValueError(f"live executor cannot apply {act!r}")
+
+    def _apply_stream(self, act: StreamState):
+        pl = self.placements.get(act.rid)
+        if pl is None or pl.primary[0] != act.src:
+            return
+        src_idx, src_slot = pl.primary
+        src = self.engines[src_idx]
+        dst = self.engines[act.dst]
+        free = dst.free_slots()
+        if not free:
+            return                       # capacity raced away; stay put
+        dst_slot = free[0]
+        req = src.slot_req[src_slot]
+        exported = src.export_slot(src_slot)
+        if act.as_replica:
+            # primary stays at src; dst hosts a redundant copy
+            dst.import_slot(dst_slot, exported, req,
+                            as_replica_of=(src.instance_id, src_slot))
+            pl.replica = (act.dst, dst_slot)
+        else:
+            dst.import_slot(dst_slot, exported, req)
+            if act.retain_replica:
+                src.demote_to_replica(src_slot,
+                                      of=(dst.instance_id, dst_slot))
+                pl.replica = (src_idx, src_slot)
+            else:
+                src.release(src_slot)
+            pl.primary = (act.dst, dst_slot)
+
+    def _apply_mirror(self, act: MirrorSync):
+        pl = self.placements.get(act.rid)
+        if pl is None or pl.replica is None:
+            return
+        p_idx, p_slot = pl.primary
+        r_idx, r_slot = pl.replica
+        src = self.engines[p_idx]
+        if p_slot not in src.slot_req:
+            return
+        self.engines[r_idx].sync_replica_from(src, p_slot, r_slot)
+        self.stats["mirror_syncs"] += 1
+
+    def _apply_promote(self, act: PromoteReplica):
+        pl = self.placements.get(act.rid)
+        if pl is None or pl.replica is None or pl.primary[0] != act.src:
+            return
+        p_idx, p_slot = pl.primary
+        r_idx, r_slot = pl.replica
+        src = self.engines[p_idx]
+        dst = self.engines[r_idx]
+        req = src.slot_req[p_slot]
+        # zero-cost migration: promote replica, demote primary
+        dst.promote_replica(r_slot, req)
+        src.demote_to_replica(p_slot, of=(dst.instance_id, r_slot))
+        pl.primary = (r_idx, r_slot)
+        pl.replica = (p_idx, p_slot)
+        self.stats["replica_promotions"] += 1
+
+    def _apply_evict(self, act: EvictReplica):
+        pl = self.placements.get(act.rid)
+        if pl is None or pl.replica is None or pl.replica[0] != act.instance:
+            return
+        r_idx, r_slot = pl.replica
+        self.engines[r_idx].release(r_slot)
+        pl.replica = None
+        self.stats["replica_evictions"] += 1
+
+    # -- bookkeeping ----------------------------------------------------------
+    def _release_finished(self):
+        for rid, pl in list(self.placements.items()):
+            p_idx, p_slot = pl.primary
+            req = self.engines[p_idx].slot_req.get(p_slot)
+            if req is None or req.rid != rid:     # finished & released
+                if pl.replica is not None:
+                    r_idx, r_slot = pl.replica
+                    self.engines[r_idx].release(r_slot)
+                del self.placements[rid]
+                self._reqs.pop(rid, None)
+
+    # -- driver ---------------------------------------------------------------
+    def pending(self) -> int:
+        live = len(self.queue) + len(self.placements)
+        live += sum(len(p) for p in self._pending)
+        return live
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while self.pending() and steps < max_steps:
+            self.step()
+            # stamp finish times for anything that completed this iteration
+            # (including requests that finish in their very first step)
+            for req in self._submitted:
+                if req.phase is Phase.DONE and req.finish_time is None:
+                    req.finish_time = self.now
+                    self.finished.append(req)
+            steps += 1
+        return self.finished

@@ -1,0 +1,102 @@
+"""Backend-agnostic read-only views of cluster state.
+
+These Protocols are the *only* state a ``SchedulerPolicy`` may consult, so
+the same decision kernel runs over live JAX engines and over the
+discrete-event simulator.  Each backend supplies its own cost model through
+the view: ``mem_free``/``decode_weights`` are state **bytes** computed from
+that backend's accounting (``repro.core.kvbytes`` for live engines,
+``PerfModel.kv_bytes`` for the simulator), so rankings agree whenever both
+backends describe the same requests at the same lengths.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class RequestView(Protocol):
+    """What a policy may know about a request (live ``Request`` and
+    ``SimRequest`` both satisfy this structurally)."""
+    rid: int
+    prompt_len: int
+
+    @property
+    def total_len(self) -> int: ...
+
+
+@runtime_checkable
+class InstanceView(Protocol):
+    """One serving instance, as the policy sees it."""
+
+    @property
+    def index(self) -> int:
+        """Global instance index (engine ``instance_id`` / sim ``iid``)."""
+        ...
+
+    # -- capacity -----------------------------------------------------------
+    def free_slots(self) -> int:
+        """Free request slots (live) or residual batch slack (sim)."""
+        ...
+
+    def mem_free(self) -> float:
+        """Free serving-state bytes under this backend's accounting."""
+        ...
+
+    def can_admit(self, req: RequestView, taking: int = 0) -> bool:
+        """Can this instance accept a new prefill, with ``taking`` requests
+        already earmarked this iteration?"""
+        ...
+
+    def can_hold_primary(self, req: RequestView, resident: bool = False
+                         ) -> bool:
+        """Can it host ``req`` as a decode primary?  ``resident`` means the
+        state is already materialized here (no new capacity needed)."""
+        ...
+
+    def can_hold_replica(self, req: RequestView, resident: bool = False
+                         ) -> bool:
+        """Can it hold a redundant copy of ``req``'s state?"""
+        ...
+
+    def can_queue(self) -> bool:
+        """Whether admission may overflow into a backlog on this instance
+        (the simulator queues; live engines must have a slot)."""
+        ...
+
+    # -- load ---------------------------------------------------------------
+    def decode_load(self) -> int:
+        """Number of resident decode primaries."""
+        ...
+
+    def prefill_backlog(self) -> int:
+        """Requests routed here but not yet prefilled."""
+        ...
+
+    def prefill_backlog_tokens(self) -> int:
+        """Total prompt tokens awaiting prefill here."""
+        ...
+
+    def decode_weights(self) -> Mapping[int, float]:
+        """rid -> state bytes read per decode step (balancer weight)."""
+        ...
+
+    def replica_weights(self) -> Mapping[int, float]:
+        """rid -> bytes freed if this instance's replica of rid is
+        evicted."""
+        ...
+
+
+@runtime_checkable
+class ClusterView(Protocol):
+    """The whole cluster, as the policy sees it."""
+
+    def instances(self) -> Sequence[InstanceView]: ...
+
+    def pairs(self) -> Sequence[Tuple[InstanceView, InstanceView]]:
+        """AcceLLM pair structure: (instances[2k], instances[2k+1])."""
+        ...
+
+    def placements(self) -> Mapping[int, Tuple[int, Optional[int]]]:
+        """rid -> (primary instance index, replica instance index or
+        None), for every request currently resident."""
+        ...

@@ -63,7 +63,11 @@ class Policy:
     def on_prefill_done(self, inst: SimInstance, reqs: List[SimRequest]):
         raise NotImplementedError
 
-    def on_decode_done(self, inst: SimInstance):
+    def on_decode_done(self, inst: SimInstance,
+                       finished: List[SimRequest]):
+        """Called after each decode iteration with the requests that
+        finished in it (explicitly, so policies can release per-request
+        resources without scanning global history)."""
         pass
 
     def decode_step_time(self, inst: SimInstance) -> float:
@@ -82,6 +86,7 @@ class Simulator:
         self.now = 0.0
         self._heap: List[tuple] = []
         self._seq = itertools.count()
+        self._kicking: set = set()   # re-entrancy guard for kick()
         self.finished: List[SimRequest] = []
         self.dropped: List[SimRequest] = []
 
@@ -93,8 +98,6 @@ class Simulator:
         """Start the next iteration on an idle instance."""
         if inst.busy:
             return
-        if not hasattr(self, "_kicking"):
-            self._kicking = set()
         if inst.iid in self._kicking:
             return
         self._kicking.add(inst.iid)
@@ -151,6 +154,7 @@ class Simulator:
                 r.generated += 1
             self.policy.on_prefill_done(inst, reqs)
         if kind in ("decode", "mixed"):
+            finished_now: List[SimRequest] = []
             for rid in batch_snapshot:
                 r = inst.decode_batch.get(rid)
                 if r is None:
@@ -160,8 +164,9 @@ class Simulator:
                 if r.done:
                     r.finish_time = self.now
                     self.finished.append(r)
+                    finished_now.append(r)
                     del inst.decode_batch[rid]
-            self.policy.on_decode_done(inst)
+            self.policy.on_decode_done(inst, finished_now)
         inst.note_peak()
         self.kick(inst)
 

@@ -1,5 +1,10 @@
-"""The serving systems of the paper's evaluation (§5.2) + one more from
-its related work (§2).
+"""Simulator adapters for the shared scheduling kernels.
+
+The serving systems of the paper's evaluation (§5.2) plus one from its
+related work (§2) are *decided* by the backend-agnostic kernels in
+``repro.scheduling`` — the same objects that drive live JAX engines
+through ``repro.scheduling.live`` — and *executed* here against the
+discrete-event simulator's analytic cost model:
 
   VLLMPolicy      — vLLM-style: independent instances, continuous batching
                     that co-schedules prefill with decode (prefill
@@ -9,28 +14,134 @@ its related work (§2).
                     prefill instances, rest decode-only; post-prefill KV
                     transfer to a decode instance is on the request's
                     critical path (Fig. 1 Case B).
-  SarathiPolicy   — Sarathi-Serve-style chunked prefill (beyond the paper's
-                    baselines, from its §2): prompts split into fixed-size
-                    chunks co-scheduled with decode, bounding (not
-                    eliminating) the TBT spike — trades TTFT for TBT.
+  SarathiPolicy   — Sarathi-Serve-style chunked prefill: prompts split into
+                    fixed-size chunks co-scheduled with decode, bounding
+                    (not eliminating) the TBT spike — trades TTFT for TBT.
   AcceLLMPolicy   — the paper's system: instance pairs, dynamic roles,
                     per-layer-overlapped KV streaming, redundant KV copies,
                     count+state-bytes decode balancing, replica eviction
                     under memory pressure.
+
+Each adapter owns only simulator mechanics (event pushes, durations,
+busy-state handling); routing, role selection, placement, rebalancing and
+eviction decisions are delegated to its kernel.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.balancer import Item, partition, should_rebalance
-from repro.sim.cluster import Policy, SimInstance
+from repro.scheduling.accellm import AcceLLMScheduler
+from repro.scheduling.actions import (EvictReplica, PromoteReplica,
+                                      StreamState)
+from repro.scheduling.base import MAX_PREFILL_BATCH, SchedulerPolicy
+from repro.scheduling.baselines import (SarathiScheduler, SplitwiseScheduler,
+                                        VLLMScheduler)
+from repro.sim.cluster import Policy, SimInstance, Simulator
 from repro.sim.workload import SimRequest
 
-MAX_PREFILL_BATCH = 4
+__all__ = ["AcceLLMPolicy", "VLLMPolicy", "SplitwisePolicy", "SarathiPolicy",
+           "SimInstanceView", "SimClusterView", "MAX_PREFILL_BATCH"]
 
 
-def _fits(inst: SimInstance, req: SimRequest, extra: float = 0.0) -> bool:
-    return inst.mem_free() >= inst.perf.kv_bytes(req.prompt_len) + extra
+# ---------------------------------------------------------------------------
+# Views: the simulator's cost model behind the scheduling protocols
+# ---------------------------------------------------------------------------
+
+
+class SimInstanceView:
+    """InstanceView over a SimInstance (see repro.scheduling.views)."""
+
+    def __init__(self, inst: SimInstance,
+                 placement: Dict[int, Tuple[int, Optional[int]]]):
+        self._i = inst
+        self._placement = placement
+
+    @property
+    def index(self) -> int:
+        return self._i.iid
+
+    # -- capacity ------------------------------------------------------------
+    def free_slots(self) -> int:
+        return max(0, self._i.max_batch - len(self._i.decode_batch))
+
+    def mem_free(self) -> float:
+        return self._i.mem_free()
+
+    def can_admit(self, req, taking: int = 0) -> bool:
+        fits = self._i.mem_free() >= self._i.perf.kv_bytes(req.prompt_len)
+        return fits and len(self._i.decode_batch) + taking < self._i.max_batch
+
+    def can_hold_primary(self, req, resident: bool = False) -> bool:
+        # the simulator's decode batch is elastic; memory pressure is
+        # handled by eviction rather than refusing placement
+        return True
+
+    def can_hold_replica(self, req, resident: bool = False) -> bool:
+        return self._i.mem_free() >= self._i.perf.kv_bytes(req.total_len)
+
+    def can_queue(self) -> bool:
+        return True
+
+    # -- load ----------------------------------------------------------------
+    def decode_load(self) -> int:
+        return len(self._i.decode_batch)
+
+    def prefill_backlog(self) -> int:
+        return len(self._i.prefill_queue)
+
+    def prefill_backlog_tokens(self) -> int:
+        return sum(r.prompt_len for r in self._i.prefill_queue)
+
+    def decode_weights(self) -> Dict[int, float]:
+        return {rid: self._i.perf.kv_bytes(r.total_len)
+                for rid, r in self._i.decode_batch.items()}
+
+    def replica_weights(self) -> Dict[int, float]:
+        return {rid: self._i.perf.kv_bytes(r.total_len)
+                for rid, r in self._i.replicas.items()}
+
+
+class SimClusterView:
+    """ClusterView over a Simulator (see repro.scheduling.views)."""
+
+    def __init__(self, sim: Simulator,
+                 placement: Dict[int, Tuple[int, Optional[int]]]):
+        self._views = [SimInstanceView(i, placement) for i in sim.instances]
+        self._placement = placement
+
+    def instances(self):
+        return self._views
+
+    def pairs(self):
+        return [(self._views[i], self._views[i + 1])
+                for i in range(0, len(self._views) - 1, 2)]
+
+    def placements(self) -> Dict[int, Tuple[int, Optional[int]]]:
+        return self._placement
+
+
+class KernelPolicy(Policy):
+    """Base adapter: binds a scheduling kernel to the simulator."""
+
+    kernel: SchedulerPolicy
+    #: rid -> (primary iid, replica iid or None); empty for policies
+    #: without redundancy
+    placement: Dict[int, Tuple[int, Optional[int]]]
+
+    def __init__(self, kernel: SchedulerPolicy):
+        self.kernel = kernel
+        self.placement = {}
+
+    @property
+    def name(self):  # type: ignore[override]
+        return self.kernel.name
+
+    def view(self) -> SimClusterView:
+        return SimClusterView(self.sim, self.placement)
+
+    def route(self, req: SimRequest) -> Optional[SimInstance]:
+        idx = self.kernel.route(self.view(), req)
+        return None if idx is None else self.sim.instances[idx]
 
 
 # ---------------------------------------------------------------------------
@@ -38,26 +149,20 @@ def _fits(inst: SimInstance, req: SimRequest, extra: float = 0.0) -> bool:
 # ---------------------------------------------------------------------------
 
 
-class VLLMPolicy(Policy):
-    name = "vllm"
+class VLLMPolicy(KernelPolicy):
 
-    def route(self, req):
-        # least-loaded instance with memory headroom
-        ok = [i for i in self.sim.instances if _fits(i, req)]
-        pool = ok or self.sim.instances
-        return min(pool, key=lambda i: len(i.decode_batch)
-                   + len(i.prefill_queue))
+    def __init__(self, kernel: Optional[SchedulerPolicy] = None):
+        super().__init__(kernel or VLLMScheduler())
 
     def next_action(self, inst):
         if inst.prefill_queue:
-            take = []
-            while (inst.prefill_queue and len(take) < MAX_PREFILL_BATCH
-                   and len(inst.decode_batch) + len(take) < inst.max_batch
-                   and _fits(inst, inst.prefill_queue[0])):
-                take.append(inst.prefill_queue.pop(0))
+            n = self.kernel.prefill_batch(self.view(), inst.iid,
+                                          inst.prefill_queue)
+            take = [inst.prefill_queue.pop(0) for _ in range(n)]
             if take:
                 # co-batched prefill+decode iteration (the TBT spike)
-                return ("mixed", take) if inst.decode_batch else ("prefill", take)
+                return ("mixed", take) if inst.decode_batch else ("prefill",
+                                                                  take)
         if inst.decode_batch:
             return ("decode",)
         return None
@@ -78,19 +183,23 @@ class VLLMPolicy(Policy):
 
 
 class SarathiPolicy(VLLMPolicy):
-    name = "sarathi"
 
     def __init__(self, chunk_tokens: int = 512):
+        super().__init__(SarathiScheduler(chunk_tokens))
         self.chunk_tokens = chunk_tokens
         self._chunk_work: Dict[int, int] = {}   # iid -> tokens this iter
 
     def next_action(self, inst):
+        # True intra-prompt chunking is a cost-model concern the event
+        # simulator can express exactly, so it stays here; admission limits
+        # on the iteration-clocked live executor use the kernel's
+        # prefill_batch budget instead.
         completed: List[SimRequest] = []
         budget = self.chunk_tokens
+        view = SimInstanceView(inst, self.placement)
         while budget > 0 and inst.prefill_queue:
             r = inst.prefill_queue[0]
-            if not _fits(inst, r) or (len(inst.decode_batch)
-                                      + len(completed) >= inst.max_batch):
+            if not view.can_admit(r, taking=len(completed)):
                 break
             prog = getattr(r, "prefill_progress", 0)
             take = min(r.prompt_len - prog, budget)
@@ -123,20 +232,16 @@ class SarathiPolicy(VLLMPolicy):
 # ---------------------------------------------------------------------------
 
 
-class SplitwisePolicy(Policy):
-    name = "splitwise"
+class SplitwisePolicy(KernelPolicy):
 
     def __init__(self, n_prefill: int):
+        super().__init__(SplitwiseScheduler(n_prefill))
         self.n_prefill = n_prefill
 
     def bind(self, sim):
         super().bind(sim)
         self.prefill_insts = sim.instances[: self.n_prefill]
         self.decode_insts = sim.instances[self.n_prefill:]
-
-    def route(self, req):
-        return min(self.prefill_insts,
-                   key=lambda i: sum(r.prompt_len for r in i.prefill_queue))
 
     def next_action(self, inst):
         if inst in self.prefill_insts:
@@ -154,10 +259,12 @@ class SplitwisePolicy(Policy):
                 r.finish_time = self.sim.now
                 self.sim.finished.append(r)
                 continue
-            dst = min(self.decode_insts,
-                      key=lambda i: len(i.decode_batch) - i.mem_free() * 1e-18)
-            dt = inst.perf.kv_transfer_time(r.prompt_len, overlap_layers=False)
-            self.sim.push(self.sim.now + dt, "join_decode", (dst.iid, r))
+            actions = self.kernel.place_after_prefill(self.view(), inst.iid,
+                                                      r)
+            dst_iid = actions[0].dst if actions else inst.iid
+            dt = inst.perf.kv_transfer_time(r.prompt_len,
+                                            overlap_layers=False)
+            self.sim.push(self.sim.now + dt, "join_decode", (dst_iid, r))
 
 
 # ---------------------------------------------------------------------------
@@ -165,18 +272,20 @@ class SplitwisePolicy(Policy):
 # ---------------------------------------------------------------------------
 
 
-class AcceLLMPolicy(Policy):
-    name = "accellm"
+class AcceLLMPolicy(KernelPolicy):
 
-    def __init__(self, redundancy: bool = True):
-        self.redundancy = redundancy
-        # rid -> (primary iid, replica iid or None)
-        self.placement: Dict[int, Tuple[int, Optional[int]]] = {}
+    def __init__(self, redundancy: bool = True,
+                 kernel: Optional[AcceLLMScheduler] = None):
+        super().__init__(kernel or AcceLLMScheduler(redundancy=redundancy))
+
+    @property
+    def redundancy(self) -> bool:
+        return self.kernel.redundancy
 
     def bind(self, sim):
         super().bind(sim)
         n = len(sim.instances)
-        assert n % 2 == 0
+        assert n % 2 == 0, "AcceLLM organizes instances in pairs"
         self.pairs = [(sim.instances[i], sim.instances[i + 1])
                       for i in range(0, n, 2)]
         self.pair_of = {}
@@ -188,25 +297,19 @@ class AcceLLMPolicy(Policy):
         pa, pb = self.pair_of[inst.iid]
         return pb if inst is pa else pa
 
-    # -- routing: pair with most free memory (§4.2.2) -----------------------
-    def route(self, req):
-        def pair_free(p):
-            return p[0].mem_free() + p[1].mem_free()
-        pair = max(self.pairs, key=pair_free)
-        # inside the pair, prefill lands on the less decode-loaded side
-        pa, pb = pair
-        return pa if len(pa.decode_batch) <= len(pb.decode_batch) else pb
-
     # -- dynamic roles ---------------------------------------------------------
     def next_action(self, inst):
         if inst.prefill_queue:
+            view = SimInstanceView(inst, self.placement)
             take = []
             while (inst.prefill_queue and len(take) < MAX_PREFILL_BATCH
-                   and _fits(inst, inst.prefill_queue[0])):
+                   and view.can_admit(inst.prefill_queue[0],
+                                      taking=len(take))):
                 take.append(inst.prefill_queue.pop(0))
             if not take:
                 self._evict_replica(inst)  # memory pressure (§4.2.5)
-                if inst.prefill_queue and _fits(inst, inst.prefill_queue[0]):
+                if inst.prefill_queue and view.can_admit(
+                        inst.prefill_queue[0]):
                     take = [inst.prefill_queue.pop(0)]
             if take:
                 # before flipping to prefill, hand this side's decode work
@@ -233,6 +336,7 @@ class AcceLLMPolicy(Policy):
             self.placement[rid] = (partner.iid, inst.iid)
         self.sim.kick(partner)
 
+    # -- placement: per-layer streamed during prefill (§4.2.4) -----------------
     def on_prefill_done(self, inst, reqs):
         partner = self.partner(inst)
         for r in reqs:
@@ -240,21 +344,28 @@ class AcceLLMPolicy(Policy):
                 r.finish_time = self.sim.now
                 self.sim.finished.append(r)
                 continue
-            # per-layer streamed during prefill (§4.2.4): transfer already
-            # overlapped, the request joins the partner's decode batch now;
-            # the prefilling side retains its copy as the replica.
-            dst, rep = partner, inst
-            if len(dst.decode_batch) > len(inst.decode_batch) + 1:
-                dst, rep = inst, partner
+            # transfer already overlapped with prefill: the request joins
+            # its primary's decode batch now, per the kernel's decision
+            actions = self.kernel.place_after_prefill(self.view(), inst.iid,
+                                                      r)
+            dst_iid, rep_iid = inst.iid, None
+            for act in actions:
+                if not isinstance(act, StreamState):
+                    continue
+                if act.as_replica:
+                    rep_iid = act.dst
+                else:
+                    dst_iid = act.dst
+                    if act.retain_replica:
+                        rep_iid = act.src
+            dst = self.sim.instances[dst_iid]
             dst.decode_batch[r.rid] = r
-            replica_iid = None
-            if self.redundancy and rep.mem_free() >= rep.perf.kv_bytes(
-                    r.total_len):
-                rep.replicas[r.rid] = r
-                replica_iid = rep.iid
-            self.placement[r.rid] = (dst.iid, replica_iid)
+            if rep_iid is not None:
+                self.sim.instances[rep_iid].replicas[r.rid] = r
+            self.placement[r.rid] = (dst_iid, rep_iid)
             dst.note_peak()
-            rep.note_peak()
+            if rep_iid is not None:
+                self.sim.instances[rep_iid].note_peak()
         self.sim.kick(partner)
 
     # -- decode: mirror traffic may bound the step (Fig. 10) -------------------
@@ -270,9 +381,11 @@ class AcceLLMPolicy(Policy):
             t = max(t, t_link)
         return t
 
-    def on_decode_done(self, inst):
-        # drop replicas of finished requests
-        for r in list(self.sim.finished[-8:]):
+    def on_decode_done(self, inst, finished):
+        # drop replicas of exactly the requests that finished this
+        # iteration (tracked explicitly — scanning a suffix of the global
+        # finished list leaked replicas on bursty completions)
+        for r in finished:
             pl = self.placement.pop(r.rid, None)
             if pl and pl[1] is not None:
                 self.sim.instances[pl[1]].replicas.pop(r.rid, None)
@@ -283,32 +396,27 @@ class AcceLLMPolicy(Policy):
         pa, pb = self.pair_of[inst.iid]
         if pa.busy or pb.busy:
             return
-        items = []
-        for side, e in ((0, pa), (1, pb)):
-            for rid, r in e.decode_batch.items():
-                movable = self.placement.get(rid, (None, None))[1] is not None
-                items.append(Item(rid=rid, weight=e.perf.kv_bytes(r.total_len),
-                                  home=side, movable=movable))
-        if not should_rebalance(items):
-            return
-        _, _, moves = partition(items)
-        for rid, src_i, dst_i in moves:
-            src = (pa, pb)[src_i]
-            dst = (pa, pb)[dst_i]
-            r = src.decode_batch.pop(rid)
-            dst.decode_batch[rid] = r
+        actions = self.kernel.rebalance(self.view(), inst.iid // 2)
+        for act in actions:
+            assert isinstance(act, PromoteReplica)
+            src = self.sim.instances[act.src]
+            dst = self.sim.instances[act.dst]
+            r = src.decode_batch.pop(act.rid)
+            dst.decode_batch[act.rid] = r
             # zero-cost: dst already held the replica; roles swap
-            dst.replicas.pop(rid, None)
-            src.replicas[rid] = r
-            self.placement[rid] = (dst.iid, src.iid)
-        self.sim.kick(pa)
-        self.sim.kick(pb)
+            dst.replicas.pop(act.rid, None)
+            src.replicas[act.rid] = r
+            self.placement[act.rid] = (act.dst, act.src)
+        if actions:
+            self.sim.kick(pa)
+            self.sim.kick(pb)
 
+    # -- graceful degradation (§4.2.5) ----------------------------------------
     def _evict_replica(self, inst):
-        if not inst.replicas:
-            return
-        rid = max(inst.replicas, key=lambda k: inst.replicas[k].total_len)
-        inst.replicas.pop(rid)
-        pl = self.placement.get(rid)
-        if pl:
-            self.placement[rid] = (pl[0], None)
+        view = SimInstanceView(inst, self.placement)
+        for act in self.kernel.evict(self.view(), [view]):
+            assert isinstance(act, EvictReplica)
+            self.sim.instances[act.instance].replicas.pop(act.rid, None)
+            pl = self.placement.get(act.rid)
+            if pl:
+                self.placement[act.rid] = (pl[0], None)

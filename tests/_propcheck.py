@@ -1,0 +1,77 @@
+"""Property-testing front-end: real hypothesis when installed (the
+``[test]`` extra in pyproject.toml), else a minimal uniform-random
+fallback so the suite still collects and runs the same properties.
+
+The fallback supports exactly the subset this repo uses: ``given``,
+``settings(max_examples=, deadline=)`` and the ``floats`` / ``integers``
+/ ``booleans`` / ``sampled_from`` / ``tuples`` / ``lists`` strategies
+plus ``.map``.  Draws are seeded, so failures reproduce.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strategies))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_):
+            return _Strategy(
+                lambda rng: [elements.example(rng)
+                             for _ in range(rng.randint(min_size, max_size))])
+
+    def settings(max_examples=100, deadline=None, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # deliberately no functools.wraps: pytest must see a
+            # zero-argument signature, not the strategy parameters
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(fn, "_max_examples", 50)):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,6 +1,6 @@
-"""Property-based tests (hypothesis) for the AcceLLM load balancer."""
-from hypothesis import given, settings
-from hypothesis import strategies as st
+"""Property-based tests (hypothesis, with a built-in fallback — see
+tests/_propcheck.py) for the AcceLLM load balancer."""
+from _propcheck import given, settings, st
 
 from repro.core.balancer import Item, imbalance, partition, should_rebalance
 

@@ -1,0 +1,217 @@
+"""The shared scheduling kernel: registry, eviction policy, and the
+golden-trace consistency guarantee — the AcceLLM kernel must make
+IDENTICAL routing, placement and rebalancing decisions whether it is
+driven by the live-engine executor or by the simulator adapter on the
+same request trace.  (This is the check that the policy lives in exactly
+one place: any logic re-implemented per backend would drift and break
+the trace equality.)"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.scheduling import (AcceLLMScheduler, EvictReplica, LiveCluster,
+                              get_policy, policy_names)
+from repro.serving import Request
+from repro.sim import H100, InstanceSpec, PerfModel, Simulator
+from repro.sim.policies import AcceLLMPolicy
+from repro.sim.workload import SimRequest
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_policies():
+    assert policy_names() == ["accellm", "sarathi", "splitwise", "vllm"]
+    for name in policy_names():
+        pol = get_policy(name)
+        assert pol.name == name
+    with pytest.raises(KeyError):
+        get_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# eviction: most bytes freed (the longest request's replica)
+# ---------------------------------------------------------------------------
+
+
+class _FakeView:
+    def __init__(self, index, replicas):
+        self.index = index
+        self._replicas = replicas
+
+    def replica_weights(self):
+        return self._replicas
+
+
+def test_eviction_victim_is_longest_request():
+    kernel = AcceLLMScheduler()
+    views = [_FakeView(0, {3: 100.0, 9: 400.0}),
+             _FakeView(1, {5: 250.0})]
+    victims = kernel._eviction_victims(views, need=1)
+    assert victims == [EvictReplica(rid=9, instance=0)]
+    # ties break toward the lowest rid, deterministically
+    views = [_FakeView(0, {7: 100.0, 2: 100.0})]
+    assert kernel._eviction_victims(views, need=1)[0].rid == 2
+
+
+def test_sim_eviction_goes_through_kernel():
+    perf = PerfModel(get_config("llama2-70b"), InstanceSpec(H100, 4))
+    sim = Simulator(AcceLLMPolicy(), perf, n_instances=2)
+    pol = sim.policy
+    short = SimRequest(rid=0, arrival=0.0, prompt_len=10, decode_len=4)
+    long = SimRequest(rid=1, arrival=0.0, prompt_len=500, decode_len=4)
+    inst = sim.instances[0]
+    inst.replicas = {0: short, 1: long}
+    pol.placement = {0: (1, 0), 1: (1, 0)}
+    pol._evict_replica(inst)
+    assert 1 not in inst.replicas, "kernel must evict the longest request"
+    assert 0 in inst.replicas
+    assert pol.placement[1] == (1, None)
+
+
+# ---------------------------------------------------------------------------
+# golden trace: live executor vs simulator adapter
+# ---------------------------------------------------------------------------
+
+# (prompt_len, decode_len) per arrival; interleaved with bare decode ticks.
+_TRACE = [("arrive", 8, 4), ("tick",), ("arrive", 12, 6), ("arrive", 6, 5),
+          ("tick",), ("arrive", 10, 3), ("tick",), ("arrive", 7, 6),
+          ("arrive", 9, 4), ("tick",)]
+
+
+def _run_live_trace(cfg, params, kernel, n_instances):
+    cluster = LiveCluster(cfg, params, n_instances=n_instances, num_slots=8,
+                          kv_capacity=256, policy=kernel)
+    key = jax.random.PRNGKey(7)
+    rids = []
+    for i, op in enumerate(_TRACE):
+        if op[0] == "arrive":
+            plen, dlen = op[1], op[2]
+            req = Request(prompt_len=plen, max_new_tokens=dlen,
+                          prompt_tokens=jax.random.randint(
+                              jax.random.fold_in(key, i), (1, plen), 0,
+                              cfg.vocab_size))
+            rids.append(req.rid)
+            cluster.submit(req)
+        cluster.step()
+    steps = 0
+    while cluster.pending() and steps < 50:
+        cluster.step()
+        steps += 1
+    assert not cluster.pending()
+    return rids, steps
+
+
+def _run_sim_trace(cfg, rids, extra_ticks, n_instances):
+    """Drive the *simulator adapter* through the same trace, lock-step:
+    arrivals route+prefill via the adapter (kernel decides), each tick
+    advances every decoding instance one token and fires the adapter's
+    decode-done hook (replica cleanup + kernel rebalancing).  The
+    instance chosen for prefill skips decoding that tick, exactly like
+    the live executor's exclusive-prefill role."""
+    kernel = AcceLLMScheduler()
+    kernel.trace = []
+    perf = PerfModel(cfg, InstanceSpec(H100, 4))
+    sim = Simulator(AcceLLMPolicy(kernel=kernel), perf,
+                    n_instances=n_instances)
+    sim.kick = lambda inst: None          # event mechanics not under test
+    pol = sim.policy
+
+    def tick(skip_iid=None):
+        finished = {}
+        for inst in sim.instances:
+            if inst.iid == skip_iid:
+                continue
+            done_here = []
+            for rid, r in list(inst.decode_batch.items()):
+                r.generated += 1
+                if r.done:
+                    del inst.decode_batch[rid]
+                    done_here.append(r)
+            finished[inst.iid] = done_here
+        for inst in sim.instances:
+            if inst.iid in finished:
+                pol.on_decode_done(inst, finished[inst.iid])
+
+    arrivals = iter(rids)
+    for op in _TRACE:
+        skip = None
+        if op[0] == "arrive":
+            r = SimRequest(rid=next(arrivals), arrival=0.0,
+                           prompt_len=op[1], decode_len=op[2])
+            inst = pol.route(r)
+            r.generated = 1               # the prefill's first token
+            pol.on_prefill_done(inst, [r])
+            skip = inst.iid
+        tick(skip_iid=skip)
+    for _ in range(extra_ticks):
+        tick()
+    return kernel.trace
+
+
+@pytest.mark.parametrize("n_instances", [2, 4])
+def test_golden_trace_live_vs_sim(setup, n_instances):
+    cfg, params = setup
+    live_kernel = AcceLLMScheduler()
+    live_kernel.trace = []
+    rids, extra = _run_live_trace(cfg, params, live_kernel, n_instances)
+    sim_trace = _run_sim_trace(cfg, rids, extra, n_instances)
+    assert live_kernel.trace == sim_trace, (
+        "shared kernel made different decisions on the two backends:\n"
+        f"live: {live_kernel.trace}\nsim:  {sim_trace}")
+    # the trace must actually exercise the interesting decisions
+    kinds = {entry[0] for entry in live_kernel.trace}
+    assert {"route", "place"} <= kinds
+    if n_instances == 2:
+        assert "rebalance" in kinds
+
+
+# ---------------------------------------------------------------------------
+# live executor runs baseline policies end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["vllm", "splitwise", "sarathi"])
+def test_live_cluster_runs_baseline_policies(setup, name):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=6,
+                          kv_capacity=128, policy=name)
+    key = jax.random.PRNGKey(3)
+    reqs = []
+    for i in range(5):
+        plen = 6 + (i % 4)
+        reqs.append(Request(prompt_len=plen, max_new_tokens=3 + (i % 3),
+                            prompt_tokens=jax.random.randint(
+                                jax.random.fold_in(key, i), (1, plen), 0,
+                                cfg.vocab_size)))
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=200)
+    assert len(done) == 5
+    for r in done:
+        assert len(r.output_tokens) == r.max_new_tokens
+    # baselines never touch the redundancy machinery
+    assert cluster.stats["mirror_syncs"] == 0
+    assert cluster.stats["replica_promotions"] == 0
+
+
+def test_api_serve_facade(setup):
+    from repro.api import ServeSpec, serve
+    cfg, params = setup
+    spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
+                     num_slots=6, kv_capacity=128, n_requests=4,
+                     workload="light", max_steps=200)
+    report = serve(spec, cfg=cfg, params=params)
+    assert report.all_finished
+    assert report.stats["prefills"] == 4
+    assert report.ttfts().size == 4

@@ -4,8 +4,7 @@ EXPERIMENTS.md)."""
 import copy
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st
 
 from repro.configs import get_config
 from repro.sim import (AcceLLMPolicy, H100, InstanceSpec, PerfModel,
