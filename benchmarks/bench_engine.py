@@ -5,11 +5,12 @@ import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import SMOKE, emit
 from repro.api import ServeSpec, serve
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serving import InstanceEngine, Request
+from repro.workloads import SLO, Poisson, UniformLengths, WorkloadSpec
 
 
 def main():
@@ -51,16 +52,35 @@ def main():
     emit("engine_import_replica", (time.perf_counter() - t0) * 1e6,
          "replica install")
     # cluster end-to-end through the unified facade
+    n_req = 3 if SMOKE else 6
     spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
                      num_slots=8, kv_capacity=256, max_steps=200)
-    reqs = [mk(10 + i) for i in range(6)]
+    reqs = [mk(10 + i) for i in range(n_req)]
     t0 = time.perf_counter()
     report = serve(spec, requests=reqs, cfg=cfg, params=params)
     us = (time.perf_counter() - t0) * 1e6
-    emit("engine_cluster_6req_e2e", us,
+    emit(f"engine_cluster_{n_req}req_e2e", us,
          f"finished={len(report.finished)};"
          f"rebalances={report.stats['rebalances']};"
          f"promotions={report.stats['replica_promotions']}")
+
+    # open-loop end-to-end: requests arrive over time on the iteration
+    # clock from a shared WorkloadSpec; report scores the SLO axes
+    traffic = WorkloadSpec(
+        arrival=Poisson(rate=0.5, duration=8.0 if SMOKE else 16.0),
+        lengths=UniformLengths(prompt=(8, 32), decode=(4, 12)),
+        name="poisson-microbench")
+    spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
+                     num_slots=8, kv_capacity=256, max_steps=400,
+                     traffic=traffic, slo=SLO(ttft=10.0, tbt=3.0))
+    t0 = time.perf_counter()
+    report = serve(spec, cfg=cfg, params=params)
+    us = (time.perf_counter() - t0) * 1e6
+    s = report.slo()
+    emit("engine_cluster_openloop_e2e", us,
+         f"finished={len(report.finished)}/{report.n_submitted};"
+         f"slo_attainment={s.attainment:.2f};"
+         f"goodput={s.goodput:.3f}req_per_iter")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ def sweep(workload: str, device, dev_name: str, n_instances: int = 4):
         us = (time.perf_counter() - t0) * 1e6
         d = ";".join(
             f"{n}:tok_s={s.tokens_per_inst_s:.0f},ttft={s.ttft_p50:.3f},"
-            f"tbt={s.tbt_mean * 1e3:.1f}ms,jct={s.jct_p50:.2f}"
+            f"tbt={s.tbt_mean * 1e3:.1f}ms,jct={s.jct_p50:.2f},"
+            f"slo={s.slo_attainment:.2f},goodput={s.goodput:.2f}"
             for n, s in cells.items())
         emit(f"fig11-15_{workload}_{dev_name}_n{n_instances}_rate{int(rate)}",
              us, d)

@@ -1,17 +1,33 @@
 """Shared benchmark helpers. Every benchmark prints CSV rows:
-``name,us_per_call,derived`` (derived = the paper-figure quantity)."""
+``name,us_per_call,derived`` (derived = the paper-figure quantity).
+
+Traffic comes from the shared layer (``repro.workloads``): ``run_sim``
+builds a Poisson × Table-2 :class:`WorkloadSpec` by default, and any
+benchmark can pass its own spec (bursty, diurnal, trace replay, closed
+loop) — the same object would drive the live backend unchanged.
+
+Set ``REPRO_BENCH_SMOKE=1`` to shrink rates/durations for CI smoke runs.
+"""
 from __future__ import annotations
 
-import copy
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.configs import get_config
 from repro.sim import (AcceLLMPolicy, ASCEND_910B2, H100, InstanceSpec,
                        PerfModel, Simulator, SplitwisePolicy, VLLMPolicy,
-                       make_workload, summarize)
+                       summarize)
+from repro.workloads import SLO, WorkloadSpec, table2_spec
 
 CFG = get_config("llama2-70b")            # the paper's eval model (§5.2)
+
+#: CI smoke mode: tiny workloads so the entry points can't silently rot
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+#: latency targets used for goodput columns (modeled seconds; roughly the
+#: interactive-serving targets the paper's §5 plots are judged against)
+DEFAULT_SLO = SLO(ttft=2.0, tbt=0.2)
 
 
 def perf(device=H100, n_dev=4) -> PerfModel:
@@ -19,12 +35,21 @@ def perf(device=H100, n_dev=4) -> PerfModel:
 
 
 def run_sim(policy, workload, rate, duration, n_instances, device=H100,
-            seed=0, horizon_mult=10.0):
-    reqs = make_workload(workload, rate=rate, duration=duration, seed=seed)
+            seed=0, horizon_mult=10.0, spec: Optional[WorkloadSpec] = None,
+            slo: Optional[SLO] = DEFAULT_SLO):
+    """Simulate ``spec`` (default: Poisson × Table-2 at ``rate`` for
+    ``duration``) under ``policy`` and summarize, including SLO
+    attainment/goodput."""
+    if SMOKE:
+        rate, duration = min(rate, 4.0), min(duration, 5.0)
+    if spec is None:
+        spec = table2_spec(workload, rate=rate, duration=duration)
     sim = Simulator(policy, perf(device), n_instances=n_instances)
-    done = sim.run([copy.deepcopy(r) for r in reqs],
-                   horizon=duration * horizon_mult)
-    return sim, summarize(done, n_instances, duration * horizon_mult)
+    sim.run(source=spec.source(seed=seed), horizon=duration * horizon_mult)
+    # score ALL offered traffic (stragglers count as unfinished / SLO
+    # misses) over the time the cluster actually ran
+    elapsed = max(sim.now, float(duration))
+    return sim, summarize(sim.submitted, n_instances, elapsed, slo=slo)
 
 
 def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:

@@ -14,6 +14,7 @@ from repro.configs import get_config, list_archs
 from repro.core.kvbytes import state_bytes_at
 from repro.models import init_params
 from repro.serving import InstanceEngine, Request
+from repro.workloads import Poisson, TableLengths, WorkloadSpec
 
 
 def main():
@@ -62,13 +63,18 @@ def main():
     assert len(req.output_tokens) == req.max_new_tokens
 
     # the same mechanism, end to end: one pair under the full AcceLLM
-    # policy via the unified serving facade
+    # policy via the unified serving facade, fed by the shared traffic
+    # layer (Poisson arrivals over the iteration clock, Table-2 lengths
+    # scaled for CPU engines)
+    traffic = WorkloadSpec(arrival=Poisson(rate=0.5, duration=8.0),
+                           lengths=TableLengths("light", scale=0.05),
+                           name="quickstart")
     spec = ServeSpec(arch=args.arch, policy="accellm", n_instances=2,
-                     num_slots=4, kv_capacity=128, n_requests=4,
+                     num_slots=4, kv_capacity=128, traffic=traffic,
                      max_steps=200)
     report = serve(spec, cfg=cfg, params=params)
-    print(f"facade run: finished {len(report.finished)}/4, "
-          f"stats={report.stats}")
+    print(f"facade run (open loop): finished {len(report.finished)}/"
+          f"{report.n_submitted}, stats={report.stats}")
     assert report.all_finished
     print("OK")
 

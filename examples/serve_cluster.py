@@ -1,54 +1,74 @@
-"""End-to-end driver (deliverable b): serve a small model with batched
-requests through the unified ``repro.api.serve`` facade — pairs, dynamic
-roles, redundant KV, per-layer streaming, load balancing — and report
-TTFT/TBT/JCT.  Any registered policy (accellm / vllm / splitwise /
-sarathi) runs on the same live engines.
+"""End-to-end driver (deliverable b): one traffic kernel, two clocks.
+
+A single :class:`repro.workloads.WorkloadSpec` — bursty MMPP arrivals
+with uniform lengths — drives BOTH backends with no per-backend workload
+code:
+
+* **live**: requests arrive over time on the scheduling-iteration clock
+  (open loop) through the unified ``repro.api.serve`` facade — pairs,
+  dynamic roles, redundant KV, load balancing on real JAX engines — and
+  the report prints SLO attainment / goodput alongside TTFT/TBT/JCT.
+* **sim**: the identical spec (same seed, same request stream) runs on
+  the discrete-event simulator in modeled seconds.
 
 Run: PYTHONPATH=src python examples/serve_cluster.py \
-        [--arch phi3-medium-14b] [--requests 12] [--instances 4] \
-        [--policy accellm]
+        [--arch phi3-medium-14b] [--instances 4] [--policy accellm] \
+        [--duration 40] [--seed 0]
 """
 import argparse
-
-import jax
-import numpy as np
 
 from repro.api import ServeSpec, serve
 from repro.configs import get_config, list_archs
 from repro.scheduling.registry import policy_names
-from repro.serving import Request
+from repro.sim import (H100, InstanceSpec, PerfModel, Simulator, summarize)
+from repro.sim.policies import AcceLLMPolicy
+from repro.workloads import (SLO, Bursty, UniformLengths, WorkloadSpec)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-medium-14b", choices=list_archs())
-    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--instances", type=int, default=4)
     ap.add_argument("--policy", default="accellm", choices=policy_names())
+    ap.add_argument("--duration", type=float, default=40.0,
+                    help="arrival window in traffic time units")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-redundancy", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    key = jax.random.PRNGKey(42)
-    rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(args.requests):
-        plen = int(rng.integers(8, 48))
-        reqs.append(Request(
-            prompt_len=plen, max_new_tokens=int(rng.integers(4, 16)),
-            prompt_tokens=jax.random.randint(
-                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size)))
+    # the one workload description both backends consume
+    traffic = WorkloadSpec(
+        arrival=Bursty(rate_on=0.8, duration=args.duration,
+                       mean_on=6.0, mean_off=6.0),
+        lengths=UniformLengths(prompt=(8, 48), decode=(4, 16)),
+        name="bursty-demo")
+    slo = SLO(ttft=12.0, tbt=4.0)
 
+    # -- live backend: open loop on the iteration clock ----------------------
     spec = ServeSpec(arch=args.arch, policy=args.policy,
                      n_instances=args.instances, num_slots=8,
                      kv_capacity=256, redundancy=not args.no_redundancy,
-                     max_steps=500)
-    report = serve(spec, requests=reqs, cfg=cfg)
+                     seed=args.seed, max_steps=800, traffic=traffic, slo=slo)
+    print(f"live: {traffic.describe()}")
+    report = serve(spec)
     assert report.all_finished, "not all requests completed"
-
-    print(f"finished {len(report.finished)}/{args.requests} requests on "
+    print(f"finished {len(report.finished)}/{report.n_submitted} requests on "
           f"{args.instances} instances with policy={args.policy}")
     print(report.describe())
+
+    # -- simulator backend: the identical spec, modeled seconds --------------
+    sim = Simulator(AcceLLMPolicy(redundancy=not args.no_redundancy),
+                    PerfModel(get_config(args.arch), InstanceSpec(H100, 4)),
+                    n_instances=args.instances)
+    done = sim.run(source=traffic.source(seed=args.seed),
+                   horizon=args.duration * 10)
+    s = summarize(sim.submitted, args.instances,
+                  max(sim.now, args.duration), slo=SLO(ttft=2.0, tbt=0.5))
+    print(f"\nsim: same spec, same seed -> {len(done)} finished in modeled "
+          f"seconds")
+    print(f"sim: ttft_p50={s.ttft_p50:.3f}s tbt_mean={s.tbt_mean * 1e3:.1f}ms"
+          f" jct_p50={s.jct_p50:.2f}s slo_attainment={s.slo_attainment:.1%}"
+          f" goodput={s.goodput:.2f}req/s")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,13 @@
 One facade for every front-end (launchers, benchmarks, examples): builds
 the model, resolves the scheduling policy by name from
 ``repro.scheduling.registry`` — so live engines can run the baseline
-policies (vllm / splitwise / sarathi) as well as AcceLLM — drives the
-request set through :class:`repro.scheduling.live.LiveCluster`, and
-returns latency metrics in scheduling iterations.
+policies (vllm / splitwise / sarathi) as well as AcceLLM — and drives a
+:class:`repro.workloads.WorkloadSpec` traffic stream through
+:class:`repro.scheduling.live.LiveCluster`.  The lifecycle is open-loop:
+requests arrive over time on the iteration clock (or closed-loop for
+``ClosedLoop`` specs); latency metrics are reported in scheduling
+iterations, alongside SLO attainment and goodput when the spec carries
+an :class:`repro.workloads.SLO`.
 """
 from __future__ import annotations
 
@@ -20,7 +24,9 @@ from repro.models import init_params
 from repro.scheduling.live import LiveCluster
 from repro.scheduling.registry import get_policy, policy_accepts
 from repro.serving.request import Request
-from repro.sim.workload import WORKLOADS
+from repro.workloads import (SLO, Batch, SLOSummary, TableLengths,
+                             WorkloadSpec, queue_depth_stats, slo_summary,
+                             utilization)
 
 
 @dataclass
@@ -38,10 +44,23 @@ class ServeSpec:
     eos_token: Optional[int] = None
     seed: int = 0
     max_steps: int = 2000
-    # request sampling (used when serve() is not given explicit requests)
+    #: first-class traffic description; when None, a legacy batch-at-t=0
+    #: spec is built from (workload, n_requests, request_scale) below
+    traffic: Optional[WorkloadSpec] = None
+    #: latency targets in iterations; enables attainment/goodput reporting
+    slo: Optional[SLO] = None
+    # legacy request sampling (used when `traffic` is not given)
     workload: str = "mixed"
     n_requests: int = 16
     request_scale: float = 0.05
+
+    def resolve_traffic(self) -> WorkloadSpec:
+        if self.traffic is not None:
+            return self.traffic
+        return WorkloadSpec(arrival=Batch(self.n_requests),
+                            lengths=TableLengths(self.workload,
+                                                 scale=self.request_scale),
+                            name=self.workload)
 
 
 @dataclass
@@ -58,7 +77,25 @@ class ServeReport:
 
     @property
     def all_finished(self) -> bool:
-        return len(self.finished) == self.n_submitted
+        return (len(self.finished) == self.n_submitted
+                and self.n_undelivered == 0)
+
+    @property
+    def n_unfinished(self) -> int:
+        return self.n_submitted - len(self.finished)
+
+    @property
+    def n_undelivered(self) -> int:
+        """Source requests never admitted because max_steps elapsed."""
+        return self.cluster.undelivered
+
+    @property
+    def duration(self) -> float:
+        return self.cluster.now
+
+    @property
+    def timeline(self):
+        return self.cluster.timeline
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft() for r in self.finished])
@@ -67,21 +104,50 @@ class ServeReport:
         return np.array([r.jct() for r in self.finished])
 
     def tbts(self) -> np.ndarray:
-        flat = [t for r in self.finished for t in r.tbts()]
-        return np.array(flat or [0.0])
+        # no sentinel: an empty array must stay empty or it drags down
+        # mean/worst TBT for single-token runs
+        return np.array([t for r in self.finished for t in r.tbts()])
+
+    def slo(self, slo: Optional[SLO] = None) -> SLOSummary:
+        """Score the run against ``slo`` (default: the spec's)."""
+        slo = slo or self.spec.slo or SLO()
+        return slo_summary(self.cluster._submitted, slo,
+                           duration=self.duration,
+                           unit=self.cluster.clock.unit)
+
+    def goodput(self, slo: Optional[SLO] = None) -> float:
+        return self.slo(slo).goodput
+
+    def utilization(self) -> Dict[str, float]:
+        return utilization(self.timeline, len(self.cluster.engines))
+
+    def queue_depth(self) -> Dict[str, float]:
+        return queue_depth_stats(self.timeline)
 
     def describe(self) -> str:
-        lines = [f"finished {len(self.finished)}/{self.n_submitted}"]
+        lines = [f"finished {len(self.finished)}/{self.n_submitted}"
+                 + (f" ({self.n_unfinished} unfinished)"
+                    if self.n_unfinished else "")
+                 + (f" [{self.n_undelivered} never delivered — raise "
+                    f"max_steps]" if self.n_undelivered else "")]
         if self.finished:
             ttfts, jcts, tbts = self.ttfts(), self.jcts(), self.tbts()
-            lines += [
-                f"TTFT (iters): p50={np.percentile(ttfts, 50):.1f} "
-                f"p99={np.percentile(ttfts, 99):.1f}",
-                f"TBT  (iters): mean={tbts.mean():.2f} "
-                f"worst={tbts.max():.1f}",
-                f"JCT  (iters): p50={np.percentile(jcts, 50):.1f} "
-                f"p99={np.percentile(jcts, 99):.1f}",
-            ]
+            lines.append(f"TTFT (iters): p50={np.percentile(ttfts, 50):.1f} "
+                         f"p99={np.percentile(ttfts, 99):.1f}")
+            if tbts.size:
+                lines.append(f"TBT  (iters): mean={tbts.mean():.2f} "
+                             f"worst={tbts.max():.1f}")
+            lines.append(f"JCT  (iters): p50={np.percentile(jcts, 50):.1f} "
+                         f"p99={np.percentile(jcts, 99):.1f}")
+        if self.spec.slo is not None:
+            lines.append(self.slo().describe())
+        util = self.utilization()
+        qd = self.queue_depth()
+        if self.timeline:
+            lines.append(
+                f"util: prefill={util['prefill']:.1%} "
+                f"decode={util['decode']:.1%} idle={util['idle']:.1%}; "
+                f"queue depth mean={qd['mean']:.1f} peak={qd['peak']:.0f}")
         lines.append(f"stats: {self.stats}")
         return "\n".join(lines)
 
@@ -104,54 +170,26 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
                        eos_token=spec.eos_token)
 
 
-def sample_requests(cfg, n: int, workload: str, seed: int = 0,
-                    scale: float = 0.05
-                    ) -> List[Tuple[Request, Optional[dict]]]:
-    """Sample prompt/decode lengths from the paper's workload tables
-    (Table 2), scaled down for CPU-sized engines; attaches the modality
-    extras (vision patches / audio frames) the architecture needs."""
-    (plo, phi), (dlo, dhi) = WORKLOADS[workload]
-    rng = np.random.default_rng(seed)
-    key = jax.random.PRNGKey(seed)
-    reqs = []
-    for i in range(n):
-        plen = max(4, int(rng.integers(plo, phi + 1) * scale))
-        dlen = max(2, int(rng.integers(dlo, dhi + 1) * scale))
-        extra = None
-        if cfg.frontend is not None and cfg.frontend.kind == "vision":
-            extra = {"patch_embeds": jax.random.normal(
-                jax.random.fold_in(key, 1000 + i),
-                (1, cfg.frontend.num_prefix_tokens, cfg.frontend.embed_dim))}
-        elif cfg.is_encoder_decoder:
-            # frames length must equal the encoder memory capacity so the
-            # engine can merge the per-request state into its slot
-            extra = {"frames": jax.random.normal(
-                jax.random.fold_in(key, 1000 + i),
-                (1, cfg.encoder.max_source_positions,
-                 cfg.frontend.embed_dim))}
-        reqs.append((Request(
-            prompt_len=plen, max_new_tokens=dlen,
-            prompt_tokens=jax.random.randint(
-                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size)),
-            extra))
-    return reqs
-
-
 def serve(spec: ServeSpec,
           requests: Optional[Sequence[Union[Request,
                                             Tuple[Request, Optional[dict]]]]]
           = None, cfg=None, params=None) -> ServeReport:
-    """Build the cluster, run the request set to completion, and report."""
+    """Build the cluster, run the traffic to completion, and report.
+
+    With explicit ``requests`` they are submitted up front (closed batch,
+    the legacy contract).  Otherwise the spec's
+    :class:`~repro.workloads.WorkloadSpec` drives the cluster open-loop:
+    the request stream is pulled against the iteration clock as arrivals
+    come due."""
     cluster = build_cluster(spec, cfg=cfg, params=params)
-    if requests is None:
-        requests = sample_requests(cluster.cfg, spec.n_requests,
-                                   spec.workload, seed=spec.seed,
-                                   scale=spec.request_scale)
-    n = 0
-    for item in requests:
-        req, extra = item if isinstance(item, tuple) else (item, None)
-        cluster.submit(req, extra)
-        n += 1
-    finished = cluster.run(max_steps=spec.max_steps)
+    if requests is not None:
+        for item in requests:
+            req, extra = item if isinstance(item, tuple) else (item, None)
+            cluster.submit(req, extra)
+        finished = cluster.run(max_steps=spec.max_steps)
+    else:
+        source = spec.resolve_traffic().source(seed=spec.seed,
+                                               cfg=cluster.cfg)
+        finished = cluster.run(max_steps=spec.max_steps, source=source)
     return ServeReport(spec=spec, cluster=cluster, finished=finished,
-                       n_submitted=n)
+                       n_submitted=len(cluster._submitted))

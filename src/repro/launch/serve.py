@@ -4,10 +4,18 @@ scheduling policy through the ``repro.api.serve`` facade.
 CPU-runnable with reduced configs (default); on a real TPU fleet the same
 code paths run the full configs with the TP specs from launch/specs.py.
 
+Traffic comes from the shared workload layer (``repro.workloads``): the
+default is the legacy batch-at-t=0 request set, but ``--arrival poisson``
+/ ``bursty`` / ``diurnal`` run the cluster open-loop with requests
+arriving over time on the iteration clock, and ``--arrival closed``
+keeps ``--concurrency`` requests in flight.  ``--slo-ttft/--slo-tbt``
+add SLO attainment and goodput to the report.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
       --instances 4 --requests 16 [--policy accellm|vllm|splitwise|sarathi] \
-      [--no-redundancy] [--workload mixed]
+      [--no-redundancy] [--workload mixed] [--arrival poisson --rate 0.5 \
+      --duration 60] [--slo-ttft 20 --slo-tbt 4]
 """
 from __future__ import annotations
 
@@ -16,7 +24,24 @@ import argparse
 from repro.api import ServeSpec, serve
 from repro.configs import list_archs
 from repro.scheduling.registry import policy_names
-from repro.sim.workload import WORKLOADS
+from repro.workloads import (SLO, TABLE2, Batch, Bursty, ClosedLoop,
+                             DiurnalRamp, Poisson, TableLengths, WorkloadSpec)
+
+
+def build_arrival(args):
+    if args.arrival == "batch":
+        return Batch(args.requests)
+    if args.arrival == "poisson":
+        return Poisson(rate=args.rate, duration=args.duration)
+    if args.arrival == "bursty":
+        return Bursty(rate_on=args.rate, duration=args.duration,
+                      mean_on=args.mean_on, mean_off=args.mean_off)
+    if args.arrival == "diurnal":
+        return DiurnalRamp(low=args.rate / 4.0, peak=args.rate,
+                           period=args.duration, duration=args.duration)
+    if args.arrival == "closed":
+        return ClosedLoop(k=args.concurrency, n_requests=args.requests)
+    raise ValueError(args.arrival)
 
 
 def main():
@@ -29,19 +54,49 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--kv-capacity", type=int, default=256)
-    ap.add_argument("--workload", default="mixed", choices=list(WORKLOADS))
+    ap.add_argument("--workload", default="mixed", choices=list(TABLE2))
+    ap.add_argument("--scale", type=float, default=0.05,
+                    help="length scale for CPU-sized engines")
+    ap.add_argument("--arrival", default="batch",
+                    choices=["batch", "poisson", "bursty", "diurnal",
+                             "closed"])
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="arrivals per iteration (open-loop modes)")
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="arrival window in iterations (open-loop modes)")
+    ap.add_argument("--mean-on", type=float, default=8.0)
+    ap.add_argument("--mean-off", type=float, default=8.0)
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="in-flight requests for --arrival closed")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="TTFT target in iterations")
+    ap.add_argument("--slo-tbt", type=float, default=None,
+                    help="per-token TBT target in iterations")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-steps", type=int, default=2000)
     ap.add_argument("--no-redundancy", action="store_true")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
 
+    traffic = WorkloadSpec(
+        arrival=build_arrival(args),
+        lengths=TableLengths(args.workload, scale=args.scale),
+        name=args.workload)
+    slo = None
+    if args.slo_ttft is not None or args.slo_tbt is not None:
+        slo = SLO(ttft=args.slo_ttft if args.slo_ttft is not None
+                  else float("inf"),
+                  tbt=args.slo_tbt if args.slo_tbt is not None
+                  else float("inf"))
     spec = ServeSpec(
         arch=args.arch, policy=args.policy, n_instances=args.instances,
         num_slots=args.slots, kv_capacity=args.kv_capacity,
         redundancy=not args.no_redundancy, reduced=not args.full_config,
-        workload=args.workload, n_requests=args.requests)
+        seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo)
     print(f"serving {args.arch} on {args.instances} instances "
           f"with policy={args.policy}, redundancy={spec.redundancy}")
+    print(traffic.describe())
     report = serve(spec)
     print(report.describe())
     return 0 if report.all_finished else 1

@@ -23,6 +23,8 @@ from repro.scheduling.actions import (Action, EvictReplica, MirrorSync,
 from repro.scheduling.base import ROLE_MIXED, ROLE_PREFILL, SchedulerPolicy
 from repro.serving.engine import InstanceEngine
 from repro.serving.request import Phase, Request
+from repro.workloads import IterationClock, TimelinePoint
+from repro.workloads.spec import RequestSource
 
 
 @dataclass
@@ -145,22 +147,41 @@ class LiveCluster:
             [] for _ in range(n_instances)]
         self.placements: Dict[int, Placement] = {}
         self._reqs: Dict[int, Request] = {}
-        self.now = 0.0
+        self.clock = IterationClock()
         self.finished: List[Request] = []
         self._submitted: List[Request] = []
+        self.undelivered = 0     # source requests never admitted (max_steps)
+        self.timeline: List[TimelinePoint] = []
         self.stats = {"prefills": 0, "decode_steps": 0, "rebalances": 0,
                       "replica_promotions": 0, "replica_evictions": 0,
                       "mirror_syncs": 0}
 
+    @property
+    def now(self) -> float:
+        return self.clock.now
+
     # -- submission -----------------------------------------------------------
-    def submit(self, req: Request, extra: Optional[dict] = None):
-        req.arrival = self.now
+    def submit(self, req: Request, extra: Optional[dict] = None, *,
+               stamp_arrival: bool = True):
+        """Enqueue a request.  Open-loop sources pass
+        ``stamp_arrival=False`` to preserve the traffic layer's arrival
+        time (which may fall between scheduling iterations)."""
+        if stamp_arrival:
+            req.arrival = self.now
+        if extra is None:
+            extra = req.extra
+        if any(r.rid == req.rid for r in self._submitted
+               if r.finish_time is None):
+            # placements/_reqs are keyed by rid; mixing source streams
+            # (rids 0,1,...) with hand-built Requests (global counter)
+            # must fail loudly, not corrupt another live request's state
+            raise ValueError(f"request id {req.rid} is already in flight")
         self.queue.append((req, extra))
         self._submitted.append(req)
 
     # -- one scheduling iteration ---------------------------------------------
     def step(self):
-        self.now += 1.0
+        self.clock.tick()
         view = LiveClusterView(self)
 
         # 1. routing: policy assigns queued requests to instances
@@ -179,6 +200,8 @@ class LiveCluster:
         roles = {i: self.policy.choose_roles(view, i)
                  for i in range(len(self.engines))}
         exclusive_prefill = set()
+        prefilled = set()
+        decoded = set()
         newly: List[Tuple[int, Request]] = []
         for idx, eng in enumerate(self.engines):
             if roles[idx] not in (ROLE_PREFILL, ROLE_MIXED):
@@ -208,6 +231,8 @@ class LiveCluster:
                     eng.release(slot)
                     continue
                 newly.append((idx, req))
+            if did:
+                prefilled.add(idx)
             if did and roles[idx] == ROLE_PREFILL:
                 exclusive_prefill.add(idx)
 
@@ -223,6 +248,7 @@ class LiveCluster:
             live = [eng.slot_req[s] for s in eng.active_slots()]
             if eng.decode():
                 self.stats["decode_steps"] += 1
+                decoded.add(idx)
             for req in live:
                 req.token_times.append(self.now)
 
@@ -249,6 +275,16 @@ class LiveCluster:
                 for pending in self._pending:
                     pending.clear()
                 self.queue[:0] = stranded
+
+        # 9. observability: queue depth + per-phase utilization this iteration
+        n = len(self.engines)
+        busy = prefilled | decoded
+        self.timeline.append(TimelinePoint(
+            t=self.now,
+            queue_depth=len(self.queue) + sum(len(p) for p in self._pending),
+            n_prefill=len(prefilled),
+            n_decode=len(decoded - prefilled),
+            n_idle=n - len(busy)))
 
     # -- action interpreter ---------------------------------------------------
     def _apply(self, act: Action):
@@ -346,9 +382,52 @@ class LiveCluster:
         live += sum(len(p) for p in self._pending)
         return live
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
+    def run(self, max_steps: int = 10_000,
+            source: Optional[RequestSource] = None) -> List[Request]:
+        """Drive the cluster to completion.
+
+        Without a ``source`` this is the classic closed-batch driver over
+        previously :meth:`submit`-ted requests.  With a ``source`` the
+        lifecycle is **open-loop**: each iteration first admits every
+        request whose arrival stamp is due on the iteration clock (one
+        traffic time unit == one iteration), idling through gaps between
+        arrivals.  Closed-loop sources (``source.concurrency`` set)
+        instead keep that many requests in flight, issuing the next one
+        the moment a previous one finishes.
+        """
+        it = iter(source) if source is not None else None
+        concurrency = source.concurrency if source is not None else None
+        exhausted = it is None
+        next_req: Optional[Request] = None
+        issued = 0
         steps = 0
-        while self.pending() and steps < max_steps:
+        while steps < max_steps:
+            if it is not None and not exhausted:
+                if concurrency:
+                    # closed loop: top in-flight back up to `concurrency`
+                    while (len(self._submitted) - len(self.finished)
+                           < concurrency):
+                        req = next(it, None)
+                        if req is None:
+                            exhausted = True
+                            break
+                        self.submit(req)
+                        issued += 1
+                else:
+                    # open loop: admit everything due by the current clock
+                    while True:
+                        if next_req is None:
+                            next_req = next(it, None)
+                            if next_req is None:
+                                exhausted = True
+                                break
+                        if next_req.arrival > self.now:
+                            break
+                        self.submit(next_req, stamp_arrival=False)
+                        issued += 1
+                        next_req = None
+            if exhausted and not self.pending():
+                break
             self.step()
             # stamp finish times for anything that completed this iteration
             # (including requests that finish in their very first step)
@@ -357,4 +436,13 @@ class LiveCluster:
                     req.finish_time = self.now
                     self.finished.append(req)
             steps += 1
+        if not exhausted:
+            # max_steps elapsed with traffic still in the source: count the
+            # requests that were never even offered, so reports can't claim
+            # a healthy run over a silently truncated stream.  Count on a
+            # token-free replay of the stream (same spec + seed, no cfg)
+            # rather than draining `it`, which would materialize prompt
+            # arrays and modality extras just to throw them away.
+            total = sum(1 for _ in source.spec.source(seed=source.seed))
+            self.undelivered += total - issued
         return self.finished

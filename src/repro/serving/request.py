@@ -23,6 +23,7 @@ class Request:
     arrival: float = 0.0
     rid: int = field(default_factory=lambda: next(_ids))
     prompt_tokens: Optional[object] = None      # jax array (1, prompt_len)
+    extra: Optional[dict] = None                # modality payload (vision/audio)
     phase: Phase = Phase.QUEUED
     generated: int = 0
     output_tokens: List[int] = field(default_factory=list)

@@ -10,10 +10,12 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.sim.perf import PerfModel
 from repro.sim.workload import SimRequest
+from repro.workloads import ModeledSecondsClock, TimelinePoint
+from repro.workloads.spec import RequestSource
 
 
 @dataclass
@@ -83,12 +85,26 @@ class Simulator:
                           for i in range(n_instances)]
         self.policy = policy
         policy.bind(self)
-        self.now = 0.0
+        self.clock = ModeledSecondsClock()
         self._heap: List[tuple] = []
         self._seq = itertools.count()
         self._kicking: set = set()   # re-entrancy guard for kick()
         self.finished: List[SimRequest] = []
         self.dropped: List[SimRequest] = []
+        self.submitted: List[SimRequest] = []   # every request offered
+        self.timeline: List[TimelinePoint] = []
+        # closed-loop pump (set by run() when the source demands it)
+        self._pump: Optional[Iterator] = None
+        self._pump_target = 0
+        self._pump_issued = 0
+
+    @property
+    def now(self) -> float:
+        return self.clock.now
+
+    @now.setter
+    def now(self, t: float):
+        self.clock.now = t
 
     # -- event helpers ---------------------------------------------------------
     def push(self, time: float, kind: str, data=None):
@@ -177,9 +193,53 @@ class Simulator:
         inst.note_peak()
         self.kick(inst)
 
+    # -- observability -----------------------------------------------------------
+    def _sample_timeline(self):
+        running = [i._running[0] if i.busy and i._running else None
+                   for i in self.instances]
+        n_prefill = sum(1 for k in running if k in ("prefill", "mixed"))
+        n_decode = sum(1 for k in running if k == "decode")
+        self.timeline.append(TimelinePoint(
+            t=self.now,
+            queue_depth=sum(len(i.prefill_queue) for i in self.instances),
+            n_prefill=n_prefill, n_decode=n_decode,
+            n_idle=len(self.instances) - n_prefill - n_decode))
+
+    # -- closed-loop refill -------------------------------------------------------
+    def _pump_refill(self):
+        while (self._pump is not None
+               and self._pump_issued - len(self.finished) - len(self.dropped)
+               < self._pump_target):
+            r = next(self._pump, None)
+            if r is None:
+                self._pump = None
+                return
+            r.arrival = self.now
+            self._pump_issued += 1
+            self.submitted.append(r)
+            self.push(self.now, "arrival", r)
+
     # -- main loop ---------------------------------------------------------------
-    def run(self, requests: List[SimRequest], horizon: float = float("inf")):
-        for r in requests:
+    def run(self, requests: Optional[List[SimRequest]] = None,
+            horizon: float = float("inf"),
+            source: Optional[RequestSource] = None):
+        """Run to completion (or ``horizon``).
+
+        ``requests`` is the classic pre-materialized list; ``source`` is a
+        :class:`repro.workloads.RequestSource` — open-loop sources feed
+        the event heap directly (one traffic time unit == one modeled
+        second), closed-loop sources keep ``source.concurrency`` requests
+        in flight, issuing the next on each completion.
+        """
+        if source is not None:
+            if source.concurrency:
+                self._pump = iter(source)
+                self._pump_target = source.concurrency
+                self._pump_refill()
+            else:
+                requests = list(source)
+        for r in (requests or []):
+            self.submitted.append(r)
             self.push(r.arrival, "arrival", r)
         while self._heap:
             t, _, kind, data = heapq.heappop(self._heap)
@@ -192,4 +252,7 @@ class Simulator:
                 self._handle_done(data)
             elif kind == "join_decode":
                 self._handle_join(data)
+            self._sample_timeline()
+            if self._pump is not None:
+                self._pump_refill()
         return self.finished

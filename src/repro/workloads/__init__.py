@@ -1,0 +1,34 @@
+"""Backend-agnostic traffic layer: one workload kernel, two clocks.
+
+``WorkloadSpec`` (arrival process × length model × modality extras)
+produces a deterministic ``RequestSource`` that both the live executor
+(``repro.scheduling.live``) and the discrete-event simulator
+(``repro.sim.cluster``) consume unchanged; ``Clock`` maps the stream's
+abstract time units onto each backend's time (scheduling iterations vs
+modeled seconds).  ``SLO`` / ``slo_summary`` score either backend's
+output on attainment and goodput.
+"""
+from repro.workloads.arrivals import (ArrivalProcess, Batch, Bursty,
+                                      ClosedLoop, DiurnalRamp, Poisson,
+                                      TraceReplay)
+from repro.workloads.clock import Clock, IterationClock, ModeledSecondsClock
+from repro.workloads.lengths import (TABLE2, LengthModel, LognormalLengths,
+                                     TableLengths, TraceLengths,
+                                     UniformLengths)
+from repro.workloads.metrics import (SLO, SLOSummary, TimelinePoint,
+                                     queue_depth_stats, slo_summary,
+                                     utilization)
+from repro.workloads.spec import (RequestSource, WorkloadSpec, default_extras,
+                                  load_trace, save_trace, table2_spec)
+
+__all__ = [
+    "ArrivalProcess", "Batch", "Poisson", "Bursty", "DiurnalRamp",
+    "ClosedLoop", "TraceReplay",
+    "LengthModel", "TableLengths", "UniformLengths", "LognormalLengths",
+    "TraceLengths", "TABLE2",
+    "Clock", "IterationClock", "ModeledSecondsClock",
+    "SLO", "SLOSummary", "TimelinePoint", "slo_summary", "utilization",
+    "queue_depth_stats",
+    "WorkloadSpec", "RequestSource", "default_extras", "save_trace",
+    "load_trace", "table2_spec",
+]

@@ -1,0 +1,155 @@
+"""WorkloadSpec × RequestSource: the backend-agnostic traffic kernel.
+
+A :class:`WorkloadSpec` is *arrival process × length model × modality
+extras*.  ``spec.source(seed)`` returns a :class:`RequestSource` — a
+deterministic iterator of timestamped shared request records
+(:class:`repro.serving.request.Request`) consumed unchanged by both
+``repro.scheduling.live.LiveCluster`` and ``repro.sim.cluster.Simulator``.
+The same (spec, seed) therefore drives the identical request stream into
+either backend; only the meaning of a time unit differs (iterations vs
+modeled seconds — see :mod:`repro.workloads.clock`).
+
+Draw order per request is fixed (arrival gap first, then lengths) from a
+single seeded generator, so streams are reproducible and live-vs-sim
+comparable by construction.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Callable, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+from repro.workloads.arrivals import ArrivalProcess, Poisson, TraceReplay
+from repro.workloads.lengths import LengthModel, TableLengths, TraceLengths
+
+#: extras_fn(cfg, key, i) -> per-request modality payload (or None)
+ExtrasFn = Callable[[object, object, int], Optional[dict]]
+
+
+def default_extras(cfg, key, i: int) -> Optional[dict]:
+    """The modality payloads the architectures need: vision prefix patches
+    for image front-ends, encoder frames for speech (single home of what
+    ``repro.api.sample_requests`` used to duplicate)."""
+    import jax
+
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        return {"patch_embeds": jax.random.normal(
+            jax.random.fold_in(key, 1000 + i),
+            (1, cfg.frontend.num_prefix_tokens, cfg.frontend.embed_dim))}
+    if cfg.is_encoder_decoder:
+        # frames length must equal the encoder memory capacity so the
+        # engine can merge the per-request state into its slot
+        return {"frames": jax.random.normal(
+            jax.random.fold_in(key, 1000 + i),
+            (1, cfg.encoder.max_source_positions, cfg.frontend.embed_dim))}
+    return None
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Everything that defines the traffic, nothing about the backend."""
+    arrival: ArrivalProcess
+    lengths: LengthModel
+    extras_fn: Optional[ExtrasFn] = None
+    name: str = ""
+
+    def source(self, seed: int = 0, cfg=None) -> "RequestSource":
+        """A fresh deterministic request stream.  Pass the model ``cfg``
+        on live backends to materialize prompt tokens and modality extras;
+        the simulator needs neither and should omit it."""
+        return RequestSource(self, seed=seed, cfg=cfg)
+
+    def describe(self) -> str:
+        label = self.name or type(self.arrival).__name__.lower()
+        return (f"workload '{label}': arrival={self.arrival!r} "
+                f"lengths={self.lengths!r}")
+
+
+class RequestSource:
+    """Iterator of timestamped shared request records.
+
+    * ``rid`` is the stream index (0, 1, ...), identical across backends.
+    * ``arrival`` is in abstract time units (see module docstring).
+    * With ``cfg``: ``prompt_tokens`` and ``extra`` are materialized for
+      real engines; without, records stay array-free for the simulator.
+    * ``concurrency`` is non-None for closed-loop specs — executors then
+      issue requests on completion instead of by arrival stamp.
+    """
+
+    def __init__(self, spec: WorkloadSpec, seed: int = 0, cfg=None):
+        self.spec = spec
+        self.seed = seed
+        self.cfg = cfg
+
+    @property
+    def concurrency(self) -> Optional[int]:
+        return self.spec.arrival.concurrency
+
+    def __iter__(self) -> Iterator[Request]:
+        rng = np.random.default_rng(self.seed)
+        jax = key = None
+        if self.cfg is not None:
+            import jax
+            key = jax.random.PRNGKey(self.seed)
+        for i, t in enumerate(self.spec.arrival.times(rng)):
+            plen, dlen = self.spec.lengths.sample(rng, i)
+            req = Request(prompt_len=plen, max_new_tokens=dlen,
+                          arrival=float(t), rid=i)
+            if self.cfg is not None:
+                req.prompt_tokens = jax.random.randint(
+                    jax.random.fold_in(key, i), (1, plen), 0,
+                    self.cfg.vocab_size)
+                extras = self.spec.extras_fn or default_extras
+                req.extra = extras(self.cfg, key, i)
+            yield req
+
+    def materialize(self) -> List[Request]:
+        return list(self)
+
+
+# ---------------------------------------------------------------------------
+# JSONL trace round-trip
+# ---------------------------------------------------------------------------
+
+
+def save_trace(path, requests) -> int:
+    """Write a request stream as JSONL ({arrival, prompt_len, decode_len}
+    per line); returns the number of records written."""
+    n = 0
+    with open(path, "w") as fh:
+        for r in requests:
+            decode_len = getattr(r, "decode_len", None)
+            if decode_len is None:
+                decode_len = r.max_new_tokens
+            fh.write(json.dumps({"arrival": r.arrival,
+                                 "prompt_len": r.prompt_len,
+                                 "decode_len": decode_len}) + "\n")
+            n += 1
+    return n
+
+
+def load_trace(path, name: str = "") -> WorkloadSpec:
+    """Read a JSONL trace back into a replayable :class:`WorkloadSpec`."""
+    arrivals, pairs = [], []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            arrivals.append(float(rec["arrival"]))
+            pairs.append((int(rec["prompt_len"]), int(rec["decode_len"])))
+    return WorkloadSpec(arrival=TraceReplay(tuple(arrivals)),
+                        lengths=TraceLengths(tuple(pairs)),
+                        name=name or f"trace:{path}")
+
+
+def table2_spec(workload: str, rate: float, duration: float,
+                scale: float = 1.0) -> WorkloadSpec:
+    """The paper's §5.1 setup: Poisson arrivals with Table-2 lengths."""
+    return WorkloadSpec(arrival=Poisson(rate=rate, duration=duration),
+                        lengths=TableLengths(workload=workload, scale=scale),
+                        name=workload)

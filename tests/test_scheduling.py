@@ -215,3 +215,79 @@ def test_api_serve_facade(setup):
     assert report.all_finished
     assert report.stats["prefills"] == 4
     assert report.ttfts().size == 4
+
+
+# ---------------------------------------------------------------------------
+# golden trace, traffic layer: one WorkloadSpec seed, two backends
+# ---------------------------------------------------------------------------
+
+
+def _traffic_spec():
+    from repro.workloads import Bursty, UniformLengths, WorkloadSpec
+    return WorkloadSpec(
+        arrival=Bursty(rate_on=1.0, duration=8.0, mean_on=3.0, mean_off=2.0),
+        lengths=UniformLengths(prompt=(6, 12), decode=(3, 6)),
+        name="golden")
+
+
+def test_workload_spec_identical_stream_on_both_backends(setup):
+    """The same (WorkloadSpec, seed) must hand the live cluster and the
+    simulator the identical request sequence — same rids, arrival stamps
+    and lengths — with no per-backend workload code."""
+    cfg, _ = setup
+    spec = _traffic_spec()
+    live_stream = list(spec.source(seed=11, cfg=cfg))     # with tokens
+    sim_stream = list(spec.source(seed=11))               # array-free
+    assert [(r.rid, r.arrival, r.prompt_len, r.max_new_tokens)
+            for r in live_stream] == \
+        [(r.rid, r.arrival, r.prompt_len, r.max_new_tokens)
+         for r in sim_stream]
+    assert all(r.prompt_tokens is not None for r in live_stream)
+    assert all(r.prompt_tokens is None for r in sim_stream)
+
+
+def test_open_loop_source_drives_both_backends(setup):
+    """End to end: the one spec runs open-loop on real engines (iteration
+    clock) and on the simulator (modeled seconds); both complete the
+    identical request set."""
+    from repro.workloads import SLO, slo_summary
+    cfg, params = setup
+    spec = _traffic_spec()
+    n_expected = len(list(spec.source(seed=11)))
+    assert n_expected >= 2, "trace must exercise the lifecycle"
+
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=AcceLLMScheduler())
+    live_done = cluster.run(max_steps=100,
+                            source=spec.source(seed=11, cfg=cfg))
+    assert len(live_done) == n_expected
+    # arrival stamps survive admission (not re-stamped to iteration ticks)
+    assert sorted(r.arrival for r in live_done) == \
+        sorted(r.arrival for r in spec.source(seed=11))
+    # open loop means arrivals were admitted over time, not all at step 1
+    assert cluster.timeline[0].queue_depth < n_expected
+    s = slo_summary(live_done, SLO(ttft=50.0), duration=cluster.now,
+                    unit=cluster.clock.unit)
+    assert s.attainment == 1.0
+
+    perf = PerfModel(cfg, InstanceSpec(H100, 4))
+    sim = Simulator(AcceLLMPolicy(), perf, n_instances=2)
+    sim_done = sim.run(source=spec.source(seed=11), horizon=1000.0)
+    assert sorted(r.rid for r in sim_done) == \
+        sorted(r.rid for r in live_done)
+    assert sim.clock.unit == "s" and cluster.clock.unit == "iters"
+
+
+def test_live_open_loop_counts_undelivered(setup):
+    """max_steps elapsing mid-stream must be visible: the requests the
+    source still held are counted, not silently dropped."""
+    from repro.workloads import Poisson, UniformLengths, WorkloadSpec
+    cfg, params = setup
+    spec = WorkloadSpec(arrival=Poisson(rate=1.0, duration=50.0),
+                        lengths=UniformLengths(prompt=(4, 6), decode=(2, 3)))
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=AcceLLMScheduler())
+    cluster.run(max_steps=5, source=spec.source(seed=0, cfg=cfg))
+    n_total = len(list(spec.source(seed=0)))
+    assert cluster.undelivered > 0
+    assert len(cluster._submitted) + cluster.undelivered == n_total
