@@ -15,6 +15,7 @@ MODULES = [
     "benchmarks.bench_worst_tbt",       # Fig 16
     "benchmarks.bench_ablation",        # beyond-paper: redundancy on/off
     "benchmarks.bench_engine",          # real-engine microbench
+    "benchmarks.bench_kvstore",         # paged KV store: mirror delta cost
 ]
 
 

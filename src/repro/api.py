@@ -38,6 +38,9 @@ class ServeSpec:
     n_instances: int = 4
     num_slots: int = 8
     kv_capacity: int = 256
+    #: KV lines per block in the paged store's ledger (None: largest
+    #: divisor of kv_capacity <= 16)
+    block_lines: Optional[int] = None
     redundancy: bool = True            # forwarded to redundancy-aware policies
     reduced: bool = True               # CPU-sized variant of the architecture
     temperature: float = 0.0
@@ -167,7 +170,8 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
     return LiveCluster(cfg, params, spec.n_instances, spec.num_slots,
                        spec.kv_capacity, policy,
                        temperature=spec.temperature,
-                       eos_token=spec.eos_token)
+                       eos_token=spec.eos_token,
+                       block_lines=spec.block_lines)
 
 
 def serve(spec: ServeSpec,

@@ -7,11 +7,13 @@ the pure helpers below — a cycle if everything imported eagerly.
 """
 from repro.core.balancer import Item, imbalance, partition, should_rebalance
 from repro.core.kvbytes import (bytes_per_token, decode_read_bytes,
-                                fixed_state_bytes, state_bytes_at)
+                                fixed_state_bytes, recurrent_state_bytes,
+                                state_bytes_at, static_state_bytes)
 
 __all__ = [
     "AcceLLMCluster", "Pair", "Placement", "Item", "partition", "imbalance",
     "should_rebalance", "bytes_per_token", "fixed_state_bytes",
+    "recurrent_state_bytes", "static_state_bytes",
     "state_bytes_at", "decode_read_bytes",
 ]
 

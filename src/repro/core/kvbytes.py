@@ -7,6 +7,10 @@ current sequence length. For attention archs that is length-proportional
 KV; for MLA it is the (much smaller) latent; for SSM blocks it is a
 length-independent constant — which is why the balancer weights requests by
 ``state_bytes(cfg, length)`` rather than raw length (DESIGN.md §4).
+
+These formulas are consumed through ``repro.kvstore.LineCosts``, the cost
+card both the live ``PagedStore`` and the simulator's ``SimStore`` ledger
+charge from — change them here and every backend reprices identically.
 """
 from __future__ import annotations
 
@@ -24,8 +28,11 @@ def bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
     return n_attn * per
 
 
-def fixed_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
-    """Length-independent state bytes (SSM/conv/xLSTM memories)."""
+def recurrent_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Length-independent state that CHANGES every decode step
+    (SSM/conv/xLSTM memories).  This is the constant-size per-step mirror
+    payload for recurrent blocks (AcceLLM treats it as "one KV line" of
+    fixed size)."""
     total = 0
     for blk in cfg.block_pattern:
         if blk == "mamba":
@@ -40,13 +47,27 @@ def fixed_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
             total += cfg.xlstm.conv1d_kernel_size * d_in * 4
         elif blk == "slstm":
             total += 4 * cfg.d_model * 4
+    return total
+
+
+def static_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Length-independent state written once at prefill and immutable
+    thereafter (enc-dec: cached encoder output + cross K/V).  Streamed
+    when a request is replicated, never re-mirrored per step."""
+    total = 0
     if cfg.is_encoder_decoder:
-        # cached encoder output + cross K/V per decoder layer
         src = cfg.encoder.max_source_positions
         total += src * cfg.d_model * dtype_bytes
         total += (len(cfg.block_pattern) * 2 * src
                   * cfg.num_kv_heads * cfg.head_dim * dtype_bytes)
     return total
+
+
+def fixed_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Length-independent state bytes (recurrent memories + enc-dec
+    static caches)."""
+    return (recurrent_state_bytes(cfg, dtype_bytes)
+            + static_state_bytes(cfg, dtype_bytes))
 
 
 def state_bytes_at(cfg: ModelConfig, length: int, dtype_bytes: int = 2) -> float:

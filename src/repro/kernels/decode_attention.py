@@ -128,3 +128,139 @@ def decode_attention_pallas(
 
     out = out.reshape(B, H, hd)
     return out[:, None] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: K/V gathered through per-request block tables
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *,
+                         scale: float, block_lines: int, max_blocks: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    k_start = ki * block_lines
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (block_lines, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, block_lines)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == max_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,             # (B, 1, H, hd) or (B, H, hd)
+    k_pool: jax.Array,        # (num_blocks, block_lines, KVH, hd)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks) int32 — physical block ids
+    lengths: jax.Array,       # (B,) int32 — valid KV lines per request
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention over a paged KV pool (`repro.kvstore.PagedStore`
+    layout): the kernel never sees a contiguous per-request cache — each
+    KV tile is DMA'd from the physical block the request's block table
+    names, via scalar-prefetched table indices in the BlockSpec index
+    map.  Same online-softmax body and GQA tiling as the dense kernel;
+    entries of ``block_tables`` beyond a request's blocks may be any
+    valid block id (their scores are masked by ``lengths``)."""
+    squeeze = False
+    if q.ndim == 4:
+        assert q.shape[1] == 1
+        q = q[:, 0]
+        squeeze = True
+    B, H, hd = q.shape
+    num_blocks, block_lines, KVH = k_pool.shape[:3]
+    G = H // KVH
+    max_blocks = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, KVH, G, hd)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, block_lines=block_lines,
+        max_blocks=max_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, ki, lens, tabs: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_lines, 1, hd),
+                         lambda b, h, ki, lens, tabs: (tabs[b, ki], 0, h, 0)),
+            pl.BlockSpec((1, block_lines, 1, hd),
+                         lambda b, h, ki, lens, tabs: (tabs[b, ki], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ki, lens, tabs: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pool, v_pool)
+
+    out = out.reshape(B, H, hd)
+    return out[:, None] if squeeze else out
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                               *, scale: Optional[float] = None):
+    """jnp oracle: gather each request's blocks into a contiguous cache,
+    then run the dense decode path."""
+    from repro.models.attention import decode_attention, ring_valid
+    squeeze = q.ndim == 4
+    if not squeeze:
+        q = q[:, None]
+    B = q.shape[0]
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bl = k_pool.shape[1]
+    gathered_k = k_pool[block_tables].reshape(
+        B, block_tables.shape[1] * bl, *k_pool.shape[2:])
+    gathered_v = v_pool[block_tables].reshape(
+        B, block_tables.shape[1] * bl, *v_pool.shape[2:])
+    valid = ring_valid(lengths, gathered_k.shape[1])
+    out = decode_attention(q, gathered_k, gathered_v, scale=scale,
+                           valid=valid)
+    return out if squeeze else out[:, 0]

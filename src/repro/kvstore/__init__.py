@@ -1,0 +1,31 @@
+"""Backend-agnostic paged KV/state store (the redundancy ledger).
+
+AcceLLM prices its whole redundancy mechanism in *KV lines* (§4.1.2 —
+"newly computed KV cache lines are transferred back"): per-decode-step
+mirror traffic is one new line, post-prefill streaming is per-layer
+overlapped, eviction frees replica bytes.  This package is the single
+home of that accounting:
+
+* :class:`LineCosts` — bytes-per-line / fixed-state costs derived from
+  :mod:`repro.core.kvbytes` (one formula, both backends).
+* :class:`BlockLedger` — a fixed-size block pool with per-request block
+  tables: ``alloc / append_line / free / delta_since`` plus used-byte and
+  free-block headroom queries.
+* :class:`PagedStore` — the live implementation: owns the engine's
+  serving-state arrays, executes delta line copies and per-layer
+  streamed transfers on them, slot-affine block placement.
+* :class:`SimStore` — pure block accounting for the discrete-event
+  simulator, charged from the identical ledger.
+
+The live engine (:class:`repro.serving.InstanceEngine`) and the
+simulator (:class:`repro.sim.cluster.SimInstance`) both expose these
+numbers through :mod:`repro.scheduling.views`, so the AcceLLM kernel's
+admission, replica-budgeting and eviction decisions read the same ledger
+on either backend.
+"""
+from repro.kvstore.base import BlockLedger, KVStoreError, LineCosts
+from repro.kvstore.paged import PagedStore
+from repro.kvstore.sim import SimStore
+
+__all__ = ["BlockLedger", "KVStoreError", "LineCosts", "PagedStore",
+           "SimStore"]

@@ -1,0 +1,255 @@
+"""The shared block-table ledger: line/byte accounting both backends use.
+
+A *line* is one token's worth of attention KV across all attention layers
+(``repro.core.kvbytes.bytes_per_token``).  Recurrent blocks (SSM / xLSTM)
+contribute a constant-size state that lives in a dedicated single block
+per request; enc-dec static caches (encoder output, cross K/V) are priced
+with it but written only once.
+
+Line counts follow the serving convention both executors already used for
+memory accounting: a resident request is charged ``total_len = prompt_len
++ generated`` lines — the prompt's KV plus one line per sampled token
+(the line for the newest token is *reserved* at sampling time and
+physically written by the next decode step; see
+``PagedStore.copy_lines``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.kvbytes import (bytes_per_token, recurrent_state_bytes,
+                                static_state_bytes)
+
+
+class KVStoreError(RuntimeError):
+    """Raised on ledger misuse (double alloc, unknown rid, pool
+    exhaustion)."""
+
+
+@dataclass(frozen=True)
+class LineCosts:
+    """Byte costs of one request's serving state, per architecture.
+
+    The single source of truth consumed by the balancer weights, the
+    scheduler views and both stores — derived from
+    :mod:`repro.core.kvbytes` so live engines and the simulator price a
+    line identically.
+    """
+    line_bytes: float      # KV bytes appended per token (attention layers)
+    recurrent_bytes: int   # constant-size state re-mirrored every step
+    static_bytes: int      # written once at prefill (enc-dec caches)
+
+    @property
+    def fixed_bytes(self) -> int:
+        return self.recurrent_bytes + self.static_bytes
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, dtype_bytes: int = 2
+                    ) -> "LineCosts":
+        return cls(line_bytes=bytes_per_token(cfg, dtype_bytes),
+                   recurrent_bytes=recurrent_state_bytes(cfg, dtype_bytes),
+                   static_bytes=static_state_bytes(cfg, dtype_bytes))
+
+    def bytes_at(self, lines: int) -> float:
+        """Total state bytes for a request holding ``lines`` KV lines
+        (== ``repro.core.kvbytes.state_bytes_at(cfg, lines)``)."""
+        return self.line_bytes * lines + self.fixed_bytes
+
+    def mirror_bytes(self, delta_lines: int) -> float:
+        """Per-sync replica-update traffic: only the new KV lines plus
+        the constant-size recurrent state (§4.1.2)."""
+        return self.line_bytes * delta_lines + self.recurrent_bytes
+
+
+@dataclass
+class BlockLedger:
+    """Fixed-size block pool + per-request block tables.
+
+    Blocks hold ``block_lines`` KV lines each; a request additionally
+    pins one *fixed block* for its length-independent state when the
+    architecture has any.  ``max_blocks_per_seq`` caps a single request's
+    line blocks (the live engine's ring-buffer window: lines beyond the
+    window reuse the same physical blocks).
+
+    ``strict=False`` (the simulator's accounting overlay) lets the pool
+    *overcommit*: an alloc past the last free block mints overflow ids
+    instead of raising, ``free_blocks()`` bottoms out at 0, and overflow
+    ids are discarded on free.  The live store stays strict — a real
+    engine cannot mint HBM.
+    """
+    costs: LineCosts
+    num_blocks: int
+    block_lines: int
+    max_blocks_per_seq: Optional[int] = None
+    strict: bool = True
+    tables: Dict[int, List[int]] = field(default_factory=dict)
+    fixed_block: Dict[int, Optional[int]] = field(default_factory=dict)
+    _lines: Dict[int, int] = field(default_factory=dict)
+    _synced: Dict[int, int] = field(default_factory=dict)
+    _free: List[int] = field(default_factory=list)
+    _next_overflow: int = 0
+
+    def __post_init__(self):
+        if self.block_lines <= 0:
+            raise KVStoreError(f"block_lines must be > 0 "
+                               f"(got {self.block_lines})")
+        if not self._free:
+            self._free = list(range(self.num_blocks - 1, -1, -1))
+        self._next_overflow = self.num_blocks
+
+    def _take(self, need: int) -> List[int]:
+        """Pop ``need`` blocks off the free list; in non-strict mode any
+        shortfall is covered by minted overflow ids."""
+        if need <= len(self._free):
+            take = self._free[-need:][::-1] if need else []
+            del self._free[len(self._free) - need:]
+            return take
+        if self.strict:
+            raise KVStoreError(
+                f"pool exhausted: {need} blocks needed, "
+                f"{len(self._free)} free")
+        take = self._free[::-1]
+        self._free.clear()
+        while len(take) < need:
+            take.append(self._next_overflow)
+            self._next_overflow += 1
+        return take
+
+    # -- derived sizes -------------------------------------------------------
+    @property
+    def block_bytes(self) -> float:
+        return self.block_lines * self.costs.line_bytes
+
+    def line_blocks_for(self, lines: int) -> int:
+        n = -(-lines // self.block_lines) if lines > 0 else 0
+        if self.max_blocks_per_seq is not None:
+            n = min(n, self.max_blocks_per_seq)
+        return n
+
+    def blocks_for(self, lines: int) -> int:
+        return self.line_blocks_for(lines) + (
+            1 if self.costs.fixed_bytes > 0 else 0)
+
+    # -- queries -------------------------------------------------------------
+    def resident(self) -> List[int]:
+        return sorted(self.tables)
+
+    def lines(self, rid: int) -> int:
+        if rid not in self.tables:
+            raise KVStoreError(f"rid {rid} not resident in ledger")
+        return self._lines[rid]
+
+    def synced_line(self, rid: int) -> int:
+        """Line up to which this store's copy of ``rid`` has been
+        mirrored (== ``lines`` when current)."""
+        if rid not in self.tables:
+            raise KVStoreError(f"rid {rid} not resident in ledger")
+        return self._synced[rid]
+
+    def delta_since(self, rid: int, line: int) -> Tuple[int, int]:
+        """The ``(from_line, to_line)`` half-open range of lines a mirror
+        holding ``line`` lines is missing."""
+        to = self.lines(rid)
+        return (min(line, to), to)
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def used_blocks(self) -> int:
+        # counted from the tables (not num_blocks - free): a non-strict
+        # ledger can overcommit past the nominal pool size
+        return sum(len(t) for t in self.tables.values()) + sum(
+            1 for b in self.fixed_block.values() if b is not None)
+
+    def used_bytes_of(self, rid: int) -> float:
+        return self.costs.bytes_at(self.lines(rid))
+
+    def used_bytes(self) -> float:
+        """Line-exact resident state bytes (Σ ``state_bytes_at``), the
+        quantity the balancer and admission compare."""
+        return sum(self.costs.bytes_at(n) for n in self._lines.values())
+
+    def can_alloc(self, lines: int) -> bool:
+        return self.blocks_for(lines) <= len(self._free)
+
+    # -- mutations -----------------------------------------------------------
+    def alloc(self, rid: int, lines: int = 0, *,
+              block_ids: Optional[List[int]] = None,
+              synced: Optional[int] = None) -> List[int]:
+        """Admit ``rid`` at ``lines`` KV lines; returns the block ids
+        backing it (fixed block first, if any).  ``block_ids`` lets a
+        placement-aware caller (the live store's slot-affine layout) pick
+        specific blocks from the free pool."""
+        if rid in self.tables:
+            raise KVStoreError(f"rid {rid} already resident")
+        need = self.blocks_for(lines)
+        if block_ids is not None:
+            if len(block_ids) < need:
+                raise KVStoreError(
+                    f"rid {rid}: {need} blocks needed, hint has "
+                    f"{len(block_ids)}")
+            take = block_ids[:need]
+            missing = [b for b in take if b not in self._free]
+            if missing:
+                raise KVStoreError(f"blocks {missing} are not free")
+            for b in take:
+                self._free.remove(b)
+        else:
+            take = self._take(need)
+        fixed = take[0] if self.costs.fixed_bytes > 0 else None
+        self.fixed_block[rid] = fixed
+        self.tables[rid] = take[1:] if fixed is not None else take
+        self._lines[rid] = lines
+        self._synced[rid] = lines if synced is None else synced
+        return take
+
+    def append_line(self, rid: int, n: int = 1,
+                    *, block_ids: Optional[List[int]] = None) -> int:
+        """Grow ``rid`` by ``n`` lines, pulling new blocks from the pool
+        on boundary crossings; returns the new line count."""
+        old = self.lines(rid)
+        new = old + n
+        need = self.line_blocks_for(new) - len(self.tables[rid])
+        if need > 0:
+            if block_ids is not None:
+                grab = [b for b in block_ids if b in self._free][:need]
+                if len(grab) < need:
+                    raise KVStoreError(
+                        f"pool exhausted growing rid {rid} to {new} lines")
+                for b in grab:
+                    self._free.remove(b)
+            else:
+                grab = self._take(need)
+            self.tables[rid].extend(grab)
+        self._lines[rid] = new
+        return new
+
+    def set_lines(self, rid: int, lines: int,
+                  *, block_ids: Optional[List[int]] = None) -> int:
+        """Reconcile ``rid`` to an absolute line count (simulator resync
+        path); grows like :meth:`append_line`, never shrinks blocks."""
+        cur = self.lines(rid)
+        if lines > cur:
+            return self.append_line(rid, lines - cur, block_ids=block_ids)
+        self._lines[rid] = lines
+        return lines
+
+    def mark_synced(self, rid: int, line: Optional[int] = None):
+        self._synced[rid] = self.lines(rid) if line is None else line
+
+    def free(self, rid: int) -> int:
+        """Release ``rid``'s blocks back to the pool; returns the number
+        of blocks freed (eviction = this, on the replica's store)."""
+        if rid not in self.tables:
+            raise KVStoreError(f"rid {rid} not resident in ledger")
+        blocks = self.tables.pop(rid)
+        fixed = self.fixed_block.pop(rid)
+        if fixed is not None:
+            blocks = [fixed] + blocks
+        # overflow ids (non-strict overcommit) evaporate; real ids return
+        self._free.extend(b for b in blocks if b < self.num_blocks)
+        self._lines.pop(rid)
+        self._synced.pop(rid)
+        return len(blocks)

@@ -1,0 +1,259 @@
+"""PagedStore: the live engine's block-table KV/state store.
+
+Owns the serving-state arrays for one instance (the pytree
+``repro.models.init_state`` builds) *and* the block ledger over them.
+Physical layout is **slot-affine**: each request slot owns a contiguous
+region of the pool — one fixed block for its recurrent/static state
+(when the architecture has any) followed by ``kv_capacity /
+block_lines`` line blocks backing rows of the dense cache window — so
+the model's layer-scan state layout is untouched while allocation,
+headroom and eviction are block-granular.  The block tables this yields
+are real: :meth:`line_block_table` feeds the paged decode-attention
+kernel (``repro.kernels.decode_attention.paged_decode_attention_pallas``)
+which gathers K/V through them on the TPU path.
+
+The store executes the two redundancy data movements in *line* units:
+
+* :meth:`copy_lines` — the per-step mirror: only the KV rows in
+  ``[from_line-1, to_line-1)`` move (accounting lines count the reserved
+  next-token line, hence the -1 shift to written rows; see
+  ``kvstore.base``), plus the constant-size recurrent states.  O(delta)
+  per step, not O(kv_capacity).
+* :meth:`stream_slot` / :meth:`import_chunk` — whole-state transfers as
+  per-layer chunks, the unit the mesh overlaps with prefill compute
+  (AcceLLM §4.2.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kvstore.base import BlockLedger, KVStoreError, LineCosts
+from repro.models import init_state
+from repro.models.blocks import layer_specs, plan_segments
+
+#: attention-state keys indexed by KV line (axis 2 of the stacked leaf)
+LINE_KEYS = ("k", "v", "c_kv", "k_rope")
+#: attention-state keys written once at prefill (enc-dec cross caches)
+STATIC_KEYS = ("xk", "xv")
+
+
+def pick_block_lines(kv_capacity: int, requested: int = 16) -> int:
+    """Largest divisor of the cache window that is <= ``requested``."""
+    b = max(1, min(requested, kv_capacity))
+    while kv_capacity % b:
+        b -= 1
+    return b
+
+
+# jitted copy primitives for the mirror hot path: slot indices and row
+# positions are traced (one compile per (shape, n_rows), reused every
+# step); the destination buffer is donated so the update is in place.
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_rows(dst, src, dst_slot, src_slot, pos):
+    return dst.at[:, dst_slot, pos].set(src[:, src_slot, pos])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_entry(dst, src, dst_slot, src_slot):
+    return dst.at[:, dst_slot].set(src[:, src_slot])
+
+
+class PagedStore:
+    def __init__(self, cfg: ModelConfig, num_slots: int, kv_capacity: int,
+                 block_lines: Optional[int] = None,
+                 dtype_name: Optional[str] = None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.kv_capacity = kv_capacity
+        if block_lines is not None and kv_capacity % block_lines:
+            # an explicit geometry request must not be silently rounded
+            raise KVStoreError(
+                f"block_lines {block_lines} does not divide "
+                f"kv_capacity {kv_capacity}")
+        self.block_lines = pick_block_lines(kv_capacity, block_lines or 16)
+        self.costs = LineCosts.from_config(cfg)
+        self.line_blocks_per_slot = kv_capacity // self.block_lines
+        self._has_fixed = self.costs.fixed_bytes > 0
+        self.blocks_per_slot = self.line_blocks_per_slot + (
+            1 if self._has_fixed else 0)
+        self.ledger = BlockLedger(
+            self.costs, num_blocks=num_slots * self.blocks_per_slot,
+            block_lines=self.block_lines,
+            max_blocks_per_seq=self.line_blocks_per_slot)
+        self.state = init_state(cfg, num_slots, kv_capacity,
+                                dtype_name=dtype_name)
+        self.slot_rid: Dict[int, int] = {}
+        self.rid_slot: Dict[int, int] = {}
+        # leaf classification: (segment index, part key, leaf key, kind)
+        self._paths: List[Tuple[int, str, str, str]] = []
+        for i, seg in enumerate(plan_segments(layer_specs(cfg))):
+            for j, spec in enumerate(seg.specs):
+                for key in self.state["layers"][i][f"p{j}"]:
+                    if spec.block == "attn":
+                        kind = "line" if key in LINE_KEYS else "static"
+                    else:
+                        kind = "recurrent"
+                    self._paths.append((i, f"p{j}", key, kind))
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def capacity_bytes(self) -> float:
+        """Accounting capacity: every slot filled to the cache window."""
+        return self.num_slots * self.costs.bytes_at(self.kv_capacity)
+
+    def used_bytes(self) -> float:
+        return self.ledger.used_bytes()
+
+    def used_bytes_of(self, rid: int) -> float:
+        return self.ledger.used_bytes_of(rid)
+
+    def free_bytes(self) -> float:
+        return self.capacity_bytes - self.ledger.used_bytes()
+
+    def free_blocks(self) -> int:
+        return self.ledger.free_blocks()
+
+    # -- block tables ----------------------------------------------------------
+    def slot_block_ids(self, slot: int) -> List[int]:
+        lo = slot * self.blocks_per_slot
+        return list(range(lo, lo + self.blocks_per_slot))
+
+    def line_block_table(self, rid: int) -> List[int]:
+        """Physical *line-block* ids of ``rid`` in pool numbering (the
+        dense caches reshaped to ``(num_slots * kv_capacity/block_lines,
+        block_lines, ...)``), the table the paged decode kernel gathers
+        through."""
+        off = 1 if self._has_fixed else 0
+        out = []
+        for b in self.ledger.tables[rid]:
+            slot, k = divmod(b, self.blocks_per_slot)
+            out.append(slot * self.line_blocks_per_slot + (k - off))
+        return out
+
+    def pool_view(self, arr: jnp.ndarray) -> jnp.ndarray:
+        """Reshape one request-batched cache leaf ``(B, W, ...)`` into the
+        block pool ``(B * W/block_lines, block_lines, ...)`` addressed by
+        :meth:`line_block_table`."""
+        B, W = arr.shape[:2]
+        return arr.reshape((B * (W // self.block_lines), self.block_lines)
+                           + arr.shape[2:])
+
+    # -- ledger ops (slot-affine) ----------------------------------------------
+    def alloc(self, rid: int, slot: int, lines: int,
+              synced: Optional[int] = None) -> None:
+        if slot in self.slot_rid:
+            raise KVStoreError(f"slot {slot} already backs "
+                               f"rid {self.slot_rid[slot]}")
+        self.ledger.alloc(rid, lines, block_ids=self.slot_block_ids(slot),
+                          synced=synced)
+        self.slot_rid[slot] = rid
+        self.rid_slot[rid] = slot
+
+    def append_line(self, rid: int, n: int = 1) -> int:
+        return self.ledger.append_line(
+            rid, n, block_ids=self.slot_block_ids(self.rid_slot[rid]))
+
+    def set_lines(self, rid: int, lines: int) -> int:
+        return self.ledger.set_lines(
+            rid, lines, block_ids=self.slot_block_ids(self.rid_slot[rid]))
+
+    def free_slot(self, slot: int) -> int:
+        rid = self.slot_rid.pop(slot, None)
+        if rid is None:
+            return 0
+        self.rid_slot.pop(rid)
+        return self.ledger.free(rid)
+
+    def lines(self, rid: int) -> int:
+        return self.ledger.lines(rid)
+
+    def synced_line(self, rid: int) -> int:
+        return self.ledger.synced_line(rid)
+
+    def delta_since(self, rid: int, line: int) -> Tuple[int, int]:
+        return self.ledger.delta_since(rid, line)
+
+    def mark_synced(self, rid: int, line: Optional[int] = None):
+        self.ledger.mark_synced(rid, line)
+
+    # -- whole-slot state movement ---------------------------------------------
+    def extract_slot(self, slot: int):
+        """Per-request state (batch dim kept, size 1)."""
+
+        def ex(a):
+            return a[:, slot: slot + 1]
+
+        out = {"layers": jax.tree_util.tree_map(ex, self.state["layers"])}
+        if "enc_out" in self.state:
+            out["enc_out"] = self.state["enc_out"][slot: slot + 1]
+        return out
+
+    def merge_slot(self, slot: int, sub_state, src_slot: int = 0):
+        """Install ``sub_state`` (batch dim 1 at ``src_slot``) into
+        ``slot``.  Batch is dim 1 for layer states (dim 0 is the segment
+        repeat dim) and dim 0 for ``enc_out``."""
+
+        def merge(d, s):
+            return d.at[:, slot].set(s[:, src_slot])
+
+        self.state["layers"] = jax.tree_util.tree_map(
+            merge, self.state["layers"], sub_state["layers"])
+        if "enc_out" in self.state:
+            self.state["enc_out"] = self.state["enc_out"].at[slot].set(
+                sub_state["enc_out"][src_slot])
+
+    # -- per-layer streamed transfer (§4.2.4) ----------------------------------
+    def stream_slot(self, slot: int) -> Iterator[Tuple[tuple, jnp.ndarray]]:
+        """Yield ``slot``'s state one layer-part leaf at a time — the
+        chunk granularity a real mesh overlaps with prefill compute."""
+        for i, pj, key, _ in self._paths:
+            yield ((i, pj, key), self.state["layers"][i][pj][key]
+                   [:, slot: slot + 1])
+        if "enc_out" in self.state:
+            yield (("enc_out",), self.state["enc_out"][slot: slot + 1])
+
+    def import_chunk(self, slot: int, path: tuple, chunk: jnp.ndarray):
+        if path[0] == "enc_out":
+            self.state["enc_out"] = self.state["enc_out"].at[slot].set(
+                chunk[0])
+            return
+        i, pj, key = path
+        arr = self.state["layers"][i][pj][key]
+        self.state["layers"][i][pj][key] = arr.at[:, slot].set(chunk[:, 0])
+
+    # -- delta line copy (the §4.1.2 mirror) -----------------------------------
+    def copy_lines(self, src: "PagedStore", src_slot: int, dst_slot: int,
+                   from_line: int, to_line: int) -> float:
+        """Copy only the KV rows of accounting lines ``[from_line,
+        to_line)`` from ``src``'s slot into ours, plus the constant-size
+        recurrent states; returns the bytes moved.  Accounting line ``L``
+        reserves physical row ``L-1`` (the newest sampled token's KV is
+        written by the *next* decode step), so rows ``[from_line-1,
+        to_line-1)`` move, modulo the ring-buffer window."""
+        lo, hi = max(0, from_line - 1), max(0, to_line - 1)
+        n_rows = hi - lo
+        d_slot = jnp.int32(dst_slot)
+        s_slot = jnp.int32(src_slot)
+        for i, pj, key, kind in self._paths:
+            if kind == "static":
+                continue
+            dst_arr = self.state["layers"][i][pj][key]
+            src_arr = src.state["layers"][i][pj][key]
+            if kind == "recurrent":
+                self.state["layers"][i][pj][key] = _copy_entry(
+                    dst_arr, src_arr, d_slot, s_slot)
+                continue
+            if n_rows <= 0:
+                continue
+            cap = dst_arr.shape[2]
+            pos = jnp.asarray([p % cap for p in range(lo, hi)], jnp.int32)
+            self.state["layers"][i][pj][key] = _copy_rows(
+                dst_arr, src_arr, d_slot, s_slot, pos)
+        return self.costs.mirror_bytes(max(0, to_line - from_line))

@@ -54,6 +54,9 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--kv-capacity", type=int, default=256)
+    ap.add_argument("--block-lines", type=int, default=None,
+                    help="KV lines per block in the paged store "
+                         "(default: largest divisor of kv-capacity <= 16)")
     ap.add_argument("--workload", default="mixed", choices=list(TABLE2))
     ap.add_argument("--scale", type=float, default=0.05,
                     help="length scale for CPU-sized engines")
@@ -92,6 +95,7 @@ def main():
     spec = ServeSpec(
         arch=args.arch, policy=args.policy, n_instances=args.instances,
         num_slots=args.slots, kv_capacity=args.kv_capacity,
+        block_lines=args.block_lines,
         redundancy=not args.no_redundancy, reduced=not args.full_config,
         seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo)
     print(f"serving {args.arch} on {args.instances} instances "

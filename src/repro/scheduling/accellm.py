@@ -143,12 +143,33 @@ class AcceLLMScheduler(SchedulerPolicy):
 
     # -- mirroring (§4.1.2) -------------------------------------------------
     def sync(self, cluster: ClusterView) -> List[Action]:
+        """Delta mirror maintenance: for every (primary, replica) pair,
+        emit a MirrorSync bounded to exactly the lines the replica is
+        missing — the ledger's ``replica_synced`` mark up to the
+        primary's ``request_lines``.  Replicas that are already current
+        produce no action (and no traffic)."""
         if not self.redundancy:
             return []
-        return [MirrorSync(rid, primary, replica)
-                for rid, (primary, replica) in sorted(
-                    cluster.placements().items())
-                if replica is not None]
+        insts = cluster.instances()
+        lines_of: dict = {}      # instance -> request_lines(), built once
+        synced_of: dict = {}
+        actions: List[Action] = []
+        for rid, (primary, replica) in sorted(cluster.placements().items()):
+            if replica is None:
+                continue
+            if primary not in lines_of:
+                lines_of[primary] = insts[primary].request_lines()
+            lines = lines_of[primary].get(rid)
+            if lines is None:       # primary not decoding (e.g. finished)
+                continue
+            if replica not in synced_of:
+                synced_of[replica] = insts[replica].replica_synced()
+            synced = synced_of[replica].get(rid, 0)
+            if synced >= lines:
+                continue
+            actions.append(MirrorSync(rid, primary, replica,
+                                      from_line=synced, to_line=lines))
+        return actions
 
     # -- balancing by count + state bytes (§4.1.3) --------------------------
     def rebalance(self, cluster: ClusterView, pair_index: int

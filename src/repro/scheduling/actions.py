@@ -11,7 +11,7 @@ instance index, which is the same numbering on both backends
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Union
+from typing import Optional, Union
 
 
 @dataclass(frozen=True)
@@ -30,7 +30,10 @@ class Decode:
 @dataclass(frozen=True)
 class StreamState:
     """Move or copy a request's serving state between instances
-    (AcceLLM §4.1.2 KV streaming; per-layer-overlapped on a real mesh).
+    (AcceLLM §4.1.2 KV streaming).  Executors move it as *per-layer
+    chunks* (``PagedStore.stream_slot``), the granularity a real mesh
+    overlaps with prefill compute — only the last layer's worth is
+    exposed latency (§4.2.4).
 
     ``as_replica``      — the copy lands on ``dst`` as a *replica*; the
                           primary stays at ``src``.
@@ -48,11 +51,19 @@ class StreamState:
 
 @dataclass(frozen=True)
 class MirrorSync:
-    """Mirror the newly generated KV line(s) of ``rid`` from its primary
-    into its replica (AcceLLM §4.1.2)."""
+    """Mirror KV lines ``[from_line, to_line)`` of ``rid`` from its
+    primary into its replica (AcceLLM §4.1.2: "newly computed KV cache
+    lines are transferred back").  Delta semantics: executors copy ONLY
+    those lines (plus the constant-size recurrent state) — one line per
+    decode step in steady state, O(1) in sequence length, not
+    O(kv_capacity).  ``None`` bounds mean "from the replica's synced
+    mark" / "to the primary's current lines", resolved against the
+    executor's ledger."""
     rid: int
     primary: int
     replica: int
+    from_line: Optional[int] = None
+    to_line: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -67,8 +78,9 @@ class PromoteReplica:
 
 @dataclass(frozen=True)
 class EvictReplica:
-    """Drop the replica of ``rid`` held on ``instance`` to free memory
-    (graceful degradation, AcceLLM §4.2.5)."""
+    """Drop the replica of ``rid`` held on ``instance``, returning its
+    blocks to the instance's pool (graceful degradation, AcceLLM
+    §4.2.5)."""
     rid: int
     instance: int
 

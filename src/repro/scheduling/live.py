@@ -17,7 +17,6 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.configs.base import ModelConfig
-from repro.core.kvbytes import decode_read_bytes, state_bytes_at
 from repro.scheduling.actions import (Action, EvictReplica, MirrorSync,
                                       PromoteReplica, StreamState)
 from repro.scheduling.base import ROLE_MIXED, ROLE_PREFILL, SchedulerPolicy
@@ -51,14 +50,22 @@ class LiveInstanceView:
         return len(self._eng.free_slots())
 
     def mem_free(self) -> float:
-        cfg = self._c.cfg
-        capacity = self._eng.num_slots * state_bytes_at(
-            cfg, self._eng.kv_capacity)
-        used = sum(state_bytes_at(cfg, req.total_len)
+        # single source of truth: the engine's PagedStore ledger (which
+        # counts primaries AND replicas, line-exact)
+        return self._eng.store.free_bytes()
+
+    def free_blocks(self) -> int:
+        return self._eng.store.free_blocks()
+
+    def primary_bytes(self) -> float:
+        store = self._eng.store
+        return sum(store.used_bytes_of(req.rid)
                    for req in self._eng.slot_req.values())
-        used += sum(state_bytes_at(cfg, req.total_len)
-                    for rid, req in self._replica_reqs())
-        return capacity - used
+
+    def replica_bytes(self) -> float:
+        store = self._eng.store
+        return sum(store.used_bytes_of(store.slot_rid[s])
+                   for s in self._eng.replica_of)
 
     def can_admit(self, req, taking: int = 0) -> bool:
         return self.free_slots() > taking
@@ -84,20 +91,27 @@ class LiveInstanceView:
                    for req, _ in self._c._pending[self._index])
 
     def decode_weights(self) -> Dict[int, float]:
-        cfg = self._c.cfg
-        return {req.rid: decode_read_bytes(cfg, req.total_len)
+        # decode_read_bytes == ledger bytes at the request's lines
+        store = self._eng.store
+        return {req.rid: store.used_bytes_of(req.rid)
                 for req in self._eng.slot_req.values()
                 if req.phase is Phase.DECODE}
 
     def replica_weights(self) -> Dict[int, float]:
-        cfg = self._c.cfg
-        return {rid: decode_read_bytes(cfg, req.total_len)
-                for rid, req in self._replica_reqs()}
+        store = self._eng.store
+        return {store.slot_rid[s]: store.used_bytes_of(store.slot_rid[s])
+                for s in self._eng.replica_of}
 
-    def _replica_reqs(self):
-        for rid, pl in self._c.placements.items():
-            if pl.replica is not None and pl.replica[0] == self._index:
-                yield rid, self._c._reqs[rid]
+    # -- mirror ledger --------------------------------------------------------
+    def request_lines(self) -> Dict[int, int]:
+        store = self._eng.store
+        return {req.rid: store.lines(req.rid)
+                for req in self._eng.slot_req.values()}
+
+    def replica_synced(self) -> Dict[int, int]:
+        store = self._eng.store
+        return {store.slot_rid[s]: store.synced_line(store.slot_rid[s])
+                for s in self._eng.replica_of}
 
 
 class LiveClusterView:
@@ -127,7 +141,8 @@ class LiveCluster:
     def __init__(self, cfg: ModelConfig, params, n_instances: int,
                  num_slots: int, kv_capacity: int,
                  policy: Union[SchedulerPolicy, str], *,
-                 temperature: float = 0.0, eos_token: Optional[int] = None):
+                 temperature: float = 0.0, eos_token: Optional[int] = None,
+                 block_lines: Optional[int] = None):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
             policy = get_policy(policy)
@@ -139,7 +154,7 @@ class LiveCluster:
         self.engines = [
             InstanceEngine(cfg, params, num_slots, kv_capacity,
                            instance_id=i, temperature=temperature,
-                           eos_token=eos_token)
+                           eos_token=eos_token, block_lines=block_lines)
             for i in range(n_instances)
         ]
         self.queue: List[Tuple[Request, Optional[dict]]] = []
@@ -154,7 +169,8 @@ class LiveCluster:
         self.timeline: List[TimelinePoint] = []
         self.stats = {"prefills": 0, "decode_steps": 0, "rebalances": 0,
                       "replica_promotions": 0, "replica_evictions": 0,
-                      "mirror_syncs": 0}
+                      "mirror_syncs": 0, "mirror_bytes": 0.0,
+                      "stream_bytes": 0.0, "evicted_blocks": 0}
 
     @property
     def now(self) -> float:
@@ -311,14 +327,16 @@ class LiveCluster:
             return                       # capacity raced away; stay put
         dst_slot = free[0]
         req = src.slot_req[src_slot]
-        exported = src.export_slot(src_slot)
+        # per-layer streamed transfer (§4.2.4): the state moves one
+        # layer chunk at a time — the unit a mesh overlaps with prefill
+        chunks, length, last_tok, lines = src.export_stream(src_slot)
         if act.as_replica:
             # primary stays at src; dst hosts a redundant copy
-            dst.import_slot(dst_slot, exported, req,
-                            as_replica_of=(src.instance_id, src_slot))
+            dst.import_stream(dst_slot, chunks, length, last_tok, lines,
+                              req, as_replica_of=(src.instance_id, src_slot))
             pl.replica = (act.dst, dst_slot)
         else:
-            dst.import_slot(dst_slot, exported, req)
+            dst.import_stream(dst_slot, chunks, length, last_tok, lines, req)
             if act.retain_replica:
                 src.demote_to_replica(src_slot,
                                       of=(dst.instance_id, dst_slot))
@@ -326,6 +344,7 @@ class LiveCluster:
             else:
                 src.release(src_slot)
             pl.primary = (act.dst, dst_slot)
+        self.stats["stream_bytes"] += src.store.costs.bytes_at(lines)
 
     def _apply_mirror(self, act: MirrorSync):
         pl = self.placements.get(act.rid)
@@ -336,8 +355,11 @@ class LiveCluster:
         src = self.engines[p_idx]
         if p_slot not in src.slot_req:
             return
-        self.engines[r_idx].sync_replica_from(src, p_slot, r_slot)
+        moved = self.engines[r_idx].sync_replica_from(
+            src, p_slot, r_slot, from_line=act.from_line,
+            to_line=act.to_line)
         self.stats["mirror_syncs"] += 1
+        self.stats["mirror_bytes"] += moved
 
     def _apply_promote(self, act: PromoteReplica):
         pl = self.placements.get(act.rid)
@@ -360,9 +382,10 @@ class LiveCluster:
         if pl is None or pl.replica is None or pl.replica[0] != act.instance:
             return
         r_idx, r_slot = pl.replica
-        self.engines[r_idx].release(r_slot)
+        freed = self.engines[r_idx].release(r_slot)
         pl.replica = None
         self.stats["replica_evictions"] += 1
+        self.stats["evicted_blocks"] += freed
 
     # -- bookkeeping ----------------------------------------------------------
     def _release_finished(self):

@@ -2,11 +2,14 @@
 
 These Protocols are the *only* state a ``SchedulerPolicy`` may consult, so
 the same decision kernel runs over live JAX engines and over the
-discrete-event simulator.  Each backend supplies its own cost model through
-the view: ``mem_free``/``decode_weights`` are state **bytes** computed from
-that backend's accounting (``repro.core.kvbytes`` for live engines,
-``PerfModel.kv_bytes`` for the simulator), so rankings agree whenever both
-backends describe the same requests at the same lengths.
+discrete-event simulator.  Both backends answer from the same ledger
+arithmetic (``repro.kvstore``: the live engine's ``PagedStore``, the
+simulator's ``SimStore``, both priced by ``LineCosts`` over
+``repro.core.kvbytes``): ``mem_free``/``decode_weights`` are state
+**bytes**, ``free_blocks`` is block-pool headroom, and
+``request_lines``/``replica_synced`` expose the per-request line clocks a
+delta ``MirrorSync`` is bounded by — so rankings and deltas agree whenever
+both backends describe the same requests at the same lengths.
 """
 from __future__ import annotations
 
@@ -40,6 +43,25 @@ class InstanceView(Protocol):
 
     def mem_free(self) -> float:
         """Free serving-state bytes under this backend's accounting."""
+        ...
+
+    def free_blocks(self) -> int:
+        """Free KV blocks in this instance's pool — the block-granular
+        headroom for admission, replica budgeting and eviction.  Both
+        backends answer with the same ``repro.kvstore.BlockLedger``
+        arithmetic, but pool *size* follows each backend's capacity
+        model (live: slots x cache window; sim: modeled HBM), so
+        policies should compare headroom within a backend, not across
+        them."""
+        ...
+
+    def primary_bytes(self) -> float:
+        """Ledger bytes of resident decode primaries."""
+        ...
+
+    def replica_bytes(self) -> float:
+        """Ledger bytes of resident replicas (real memory — counted, not
+        ignored, under pressure accounting)."""
         ...
 
     def can_admit(self, req: RequestView, taking: int = 0) -> bool:
@@ -83,6 +105,17 @@ class InstanceView(Protocol):
     def replica_weights(self) -> Mapping[int, float]:
         """rid -> bytes freed if this instance's replica of rid is
         evicted."""
+        ...
+
+    # -- mirror ledger --------------------------------------------------------
+    def request_lines(self) -> Mapping[int, int]:
+        """rid -> KV lines materialized here for resident decode
+        primaries (the ``to_line`` of a delta MirrorSync)."""
+        ...
+
+    def replica_synced(self) -> Mapping[int, int]:
+        """rid -> line up to which this instance's replica of rid has
+        been mirrored (the ``from_line`` of a delta MirrorSync)."""
         ...
 
 

@@ -5,15 +5,22 @@ a JAX device set / submesh, or a single CPU device in the examples). It owns
 
   * the model params (full replica per instance — AcceLLM §4.2),
   * a slot-based continuous batch: fixed ``num_slots`` requests in flight,
-  * the serving state (KV caches / SSM states) for all slots,
+  * a :class:`repro.kvstore.PagedStore` holding the serving state (KV
+    caches / SSM states) for all slots behind a block-table ledger,
   * per-slot clocks (lengths) — decode runs with per-request ``t``.
 
 Redundancy primitives used by the AcceLLM core:
-  export_slot / import_slot  — whole per-request state (prefill-time KV
-                               streaming; on a TPU mesh this is the
-                               per-layer ppermute described in DESIGN.md §3)
-  copy_kv_line               — the per-decode-step mirror update of one new
-                               KV line (constant-size state copy for SSMs)
+  export_slot / import_slot    — whole per-request state; ``export_stream``
+                                 yields it as per-layer chunks (prefill-time
+                                 KV streaming; on a TPU mesh this is the
+                                 per-layer ppermute described in DESIGN.md §3)
+  sync_replica_from            — the per-decode-step mirror update: ONLY the
+                                 new KV lines since the replica's synced
+                                 mark move (constant-size state copy for
+                                 SSMs) — O(delta), not O(kv_capacity)
+
+All line/byte accounting (primaries AND replicas) flows through the
+store's ledger, the same arithmetic the simulator's ``SimStore`` runs.
 
 The engine never batches prefill with decode (AcceLLM §4.2.3: vLLM modified
 so prefill and decode are never co-scheduled on one instance).
@@ -21,49 +28,25 @@ so prefill and decode are never co-scheduled on one instance).
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kvstore import PagedStore
 from repro.models import decode_step, init_state, prefill
 from repro.models.state import state_bytes
 from repro.serving.request import Phase, Request
 from repro.serving.sampling import sample
 
 
-def _merge_slot(dst, src, slot: int, src_slot: int = 0):
-    """Copy src's per-request state (batch dim 1 at index src_slot) into
-    dst's batch dim at index ``slot``. Batch is dim 1 for layer states
-    (dim 0 is the segment repeat dim) and dim 0 for ``enc_out``."""
-
-    def merge_layers(d, s):
-        return d.at[:, slot].set(s[:, src_slot])
-
-    out = dict(dst)
-    out["layers"] = jax.tree_util.tree_map(merge_layers, dst["layers"],
-                                           src["layers"])
-    if "enc_out" in dst:
-        out["enc_out"] = dst["enc_out"].at[slot].set(src["enc_out"][src_slot])
-    return out
-
-
-def _extract_slot(state, slot: int):
-    def ex(a):
-        return a[:, slot: slot + 1]
-    out = {"layers": jax.tree_util.tree_map(ex, state["layers"])}
-    if "enc_out" in state:
-        out["enc_out"] = state["enc_out"][slot: slot + 1]
-    return out
-
-
 class InstanceEngine:
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  kv_capacity: int, instance_id: int = 0,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, block_lines: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -71,7 +54,8 @@ class InstanceEngine:
         self.instance_id = instance_id
         self.temperature = temperature
         self.eos_token = eos_token
-        self.state = init_state(cfg, num_slots, kv_capacity)
+        self.store = PagedStore(cfg, num_slots, kv_capacity,
+                                block_lines=block_lines)
         self.lengths = np.zeros((num_slots,), np.int32)
         self.last_tokens = np.zeros((num_slots,), np.int32)
         self.slot_req: Dict[int, Request] = {}
@@ -81,6 +65,14 @@ class InstanceEngine:
         self._jit_decode = jax.jit(
             functools.partial(decode_step, cfg), donate_argnums=(2,))
         self._jit_prefill = jax.jit(functools.partial(prefill, cfg))
+
+    @property
+    def state(self):
+        return self.store.state
+
+    @state.setter
+    def state(self, value):
+        self.store.state = value
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -94,17 +86,38 @@ class InstanceEngine:
     def batch_size(self) -> int:
         return len(self.slot_req)
 
+    def primary_kv_tokens(self) -> int:
+        return int(sum(self.store.lines(r.rid)
+                       for r in self.slot_req.values()))
+
+    def replica_kv_tokens(self) -> int:
+        return int(sum(self.store.lines(self.store.slot_rid[s])
+                       for s in self.replica_of))
+
     def total_kv_tokens(self) -> int:
-        return int(sum(self.lengths[s] for s in self.slot_req))
+        """KV lines resident on this instance — primaries AND replicas
+        (replica bytes are real HBM; the balancer must see them)."""
+        return self.primary_kv_tokens() + self.replica_kv_tokens()
 
     def state_bytes(self) -> int:
-        return state_bytes(self.state)
+        """Physical bytes of the allocated state arrays."""
+        return state_bytes(self.store.state)
+
+    def used_bytes(self) -> float:
+        """Ledger bytes of resident requests (primaries + replicas)."""
+        return self.store.used_bytes()
+
+    def free_blocks(self) -> int:
+        return self.store.free_blocks()
+
+    def _rid_at(self, slot: int) -> int:
+        return self.store.slot_rid[slot]
 
     # -- prefill --------------------------------------------------------------
     def prefill_request(self, req: Request, extra: Optional[dict] = None
                         ) -> int:
         """Run the prompt through the model into a free slot; returns the
-        first generated token."""
+        slot."""
         free = self.free_slots()
         assert free, f"instance {self.instance_id} has no free slot"
         slot = free[0]
@@ -115,13 +128,15 @@ class InstanceEngine:
         logits, fresh = self._jit_prefill(self.params, batch, fresh)
         self._key, sub = jax.random.split(self._key)
         tok = int(sample(logits, sub, self.temperature)[0])
-        self.state = _merge_slot(self.state, fresh, slot)
+        self.store.merge_slot(slot, fresh)
         self.lengths[slot] = req.prompt_len
         self.last_tokens[slot] = tok
         self.slot_req[slot] = req
         req.phase = Phase.DECODE
         req.generated += 1
         req.output_tokens.append(tok)
+        # ledger: prompt lines + the reserved line for the sampled token
+        self.store.alloc(req.rid, slot, lines=req.total_len)
         return slot
 
     # -- decode ----------------------------------------------------------------
@@ -131,7 +146,8 @@ class InstanceEngine:
             return {}
         tokens = jnp.asarray(self.last_tokens)[:, None]
         t = jnp.asarray(self.lengths)
-        logits, self.state = self._jit_decode(self.params, tokens, self.state, t)
+        logits, self.store.state = self._jit_decode(
+            self.params, tokens, self.store.state, t)
         self._key, sub = jax.random.split(self._key)
         next_tokens = np.asarray(sample(logits, sub, self.temperature))
         out = {}
@@ -141,6 +157,7 @@ class InstanceEngine:
             self.last_tokens[slot] = tok
             req.generated += 1
             req.output_tokens.append(tok)
+            self.store.append_line(req.rid)
             out[slot] = tok
             if req.done or (self.eos_token is not None
                             and tok == self.eos_token):
@@ -149,23 +166,48 @@ class InstanceEngine:
         return out
 
     # -- slot management --------------------------------------------------------
-    def release(self, slot: int):
+    def release(self, slot: int) -> int:
+        """Free the slot; returns the number of blocks returned to the
+        pool."""
         self.slot_req.pop(slot, None)
         self.replica_of.pop(slot, None)
+        freed = self.store.free_slot(slot)
         self.lengths[slot] = 0
+        return freed
 
     # -- redundancy primitives ---------------------------------------------------
     def export_slot(self, slot: int):
-        """Per-request state + clock, for replication to the pair partner.
-        On a TPU mesh this is the per-layer KV stream (ppermute) described
-        in DESIGN.md §3 — here it is a device-to-device state copy."""
-        return (_extract_slot(self.state, slot), int(self.lengths[slot]),
-                int(self.last_tokens[slot]))
+        """Per-request state + clocks, for replication to the pair
+        partner (whole-state form; :meth:`export_stream` is the
+        per-layer-chunk form a real mesh overlaps with prefill)."""
+        return (self.store.extract_slot(slot), int(self.lengths[slot]),
+                int(self.last_tokens[slot]), self.store.lines(self._rid_at(slot)))
+
+    def export_stream(self, slot: int):
+        """Per-layer streamed export: ``(chunk_iter, length, last_token,
+        lines)``."""
+        return (self.store.stream_slot(slot), int(self.lengths[slot]),
+                int(self.last_tokens[slot]),
+                self.store.lines(self._rid_at(slot)))
 
     def import_slot(self, slot: int, exported, req: Request,
                     as_replica_of: Optional[Tuple[int, int]] = None):
-        sub_state, length, last_tok = exported
-        self.state = _merge_slot(self.state, sub_state, slot)
+        sub_state, length, last_tok, lines = exported
+        self.store.alloc(req.rid, slot, lines=lines)
+        self.store.merge_slot(slot, sub_state)
+        self._install(slot, length, last_tok, req, as_replica_of)
+
+    def import_stream(self, slot: int, chunks: Iterable, length: int,
+                      last_tok: int, lines: int, req: Request,
+                      as_replica_of: Optional[Tuple[int, int]] = None):
+        """Install a per-layer streamed export chunk by chunk."""
+        self.store.alloc(req.rid, slot, lines=lines)
+        for path, chunk in chunks:
+            self.store.import_chunk(slot, path, chunk)
+        self._install(slot, length, last_tok, req, as_replica_of)
+
+    def _install(self, slot: int, length: int, last_tok: int, req: Request,
+                 as_replica_of: Optional[Tuple[int, int]]):
         self.lengths[slot] = length
         self.last_tokens[slot] = last_tok
         if as_replica_of is not None:
@@ -179,19 +221,34 @@ class InstanceEngine:
         assert slot in self.replica_of
         del self.replica_of[slot]
         self.slot_req[slot] = req
+        self.store.mark_synced(req.rid)
 
     def demote_to_replica(self, slot: int, of: Tuple[int, int]):
         assert slot in self.slot_req
+        rid = self.slot_req[slot].rid
         del self.slot_req[slot]
         self.replica_of[slot] = of
+        # an ex-primary's copy is current by definition
+        self.store.mark_synced(rid)
 
     def sync_replica_from(self, src: "InstanceEngine", src_slot: int,
-                          dst_slot: int):
-        """Mirror the partner's newly generated KV line(s) into our replica
-        slot (AcceLLM §4.1.2 'newly computed KV cache lines are transferred
-        back'). Implemented as a per-slot state copy; the traffic this
-        stands for is one KV line (or one constant-size SSM state)."""
-        exported = src.export_slot(src_slot)
-        self.state = _merge_slot(self.state, exported[0], dst_slot)
-        self.lengths[dst_slot] = exported[1]
-        self.last_tokens[dst_slot] = exported[2]
+                          dst_slot: int, from_line: Optional[int] = None,
+                          to_line: Optional[int] = None) -> float:
+        """Mirror the partner's newly generated KV line(s) into our
+        replica slot (AcceLLM §4.1.2 'newly computed KV cache lines are
+        transferred back'): copies ONLY lines ``[from_line, to_line)``
+        (default: our ledger's synced mark up to the primary's current
+        lines) plus the constant-size recurrent states.  Returns the
+        bytes moved — one KV line per decode step in steady state."""
+        rid = src._rid_at(src_slot)
+        if to_line is None:
+            to_line = src.store.lines(rid)
+        if from_line is None:
+            from_line = self.store.synced_line(rid)
+        moved = self.store.copy_lines(src.store, src_slot, dst_slot,
+                                      from_line, to_line)
+        self.lengths[dst_slot] = src.lengths[src_slot]
+        self.last_tokens[dst_slot] = src.last_tokens[src_slot]
+        self.store.set_lines(rid, to_line)
+        self.store.mark_synced(rid, to_line)
+        return moved

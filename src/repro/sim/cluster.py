@@ -12,6 +12,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro.kvstore import SimStore
 from repro.sim.perf import PerfModel
 from repro.sim.workload import SimRequest
 from repro.workloads import ModeledSecondsClock, TimelinePoint
@@ -23,6 +24,7 @@ class SimInstance:
     iid: int
     perf: PerfModel
     max_batch: int
+    block_lines: int = 16
     decode_batch: Dict[int, SimRequest] = field(default_factory=dict)
     replicas: Dict[int, SimRequest] = field(default_factory=dict)
     prefill_queue: List[SimRequest] = field(default_factory=list)
@@ -32,16 +34,42 @@ class SimInstance:
     busy_time: float = 0.0
     # current running iteration
     _running: Optional[Tuple[str, tuple]] = None
+    #: block-table accounting ledger (repro.kvstore) — the same
+    #: arithmetic the live PagedStore runs; (re)built in __post_init__
+    store: Optional[SimStore] = None
+
+    def __post_init__(self):
+        if self.store is None:
+            self.store = SimStore(self.perf.line_costs,
+                                  self.perf.kv_capacity_bytes,
+                                  block_lines=self.block_lines)
+
+    def synced_store(self) -> SimStore:
+        """The ledger, reconciled to the current resident sets.  The
+        simulator mutates ``decode_batch``/``replicas`` at event
+        granularity (and consistency tests drive them directly), so
+        membership and line counts are re-derived on read; the byte and
+        block arithmetic is the shared ``BlockLedger``'s."""
+        resident = {rid: r.total_len for rid, r in self.decode_batch.items()}
+        for rid, r in self.replicas.items():
+            resident.setdefault(rid, r.total_len)
+        return self.store.reconcile(resident)
 
     def state_bytes(self) -> float:
-        b = sum(self.perf.kv_bytes(r.total_len)
-                for r in self.decode_batch.values())
-        b += sum(self.perf.kv_bytes(r.total_len)
-                 for r in self.replicas.values())
-        return b
+        # direct line-exact sum (== the ledger's used_bytes, same
+        # LineCosts): byte reads are hot (note_peak per event, can_admit
+        # per routing decision) and need no ledger reconcile
+        costs = self.store.costs
+        return (sum(costs.bytes_at(r.total_len)
+                    for r in self.decode_batch.values())
+                + sum(costs.bytes_at(r.total_len)
+                      for r in self.replicas.values()))
 
     def mem_free(self) -> float:
         return self.perf.kv_capacity_bytes - self.state_bytes()
+
+    def free_blocks(self) -> int:
+        return self.synced_store().free_blocks()
 
     def note_peak(self):
         self.peak_state_bytes = max(self.peak_state_bytes, self.state_bytes())
@@ -79,9 +107,9 @@ class Policy:
 
 class Simulator:
     def __init__(self, policy: Policy, perf: PerfModel, n_instances: int,
-                 max_batch: int = 64):
+                 max_batch: int = 64, block_lines: int = 16):
         self.perf = perf
-        self.instances = [SimInstance(i, perf, max_batch)
+        self.instances = [SimInstance(i, perf, max_batch, block_lines)
                           for i in range(n_instances)]
         self.policy = policy
         policy.bind(self)

@@ -9,6 +9,7 @@ batched request's KV cache.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import cached_property
 from typing import Sequence
 
 from repro.configs.base import ModelConfig
@@ -23,6 +24,16 @@ class PerfModel:
     cfg: ModelConfig
     inst: InstanceSpec
 
+    def __post_init__(self):
+        if self.kv_capacity_bytes <= 0:
+            raise ValueError(
+                f"instance HBM too small for {self.cfg.name!r}: weights "
+                f"(+10% activations) need "
+                f"{1.1 * self.weight_bytes / 1e9:.1f} GB but the instance "
+                f"has {self.inst.hbm_bytes / 1e9:.1f} GB — no capacity "
+                f"left for KV/serving state.  Use more/larger devices per "
+                f"instance (InstanceSpec) or a smaller model.")
+
     @property
     def weight_bytes(self) -> float:
         return self.cfg.param_count() * DTYPE_BYTES
@@ -36,6 +47,13 @@ class PerfModel:
     def kv_capacity_bytes(self) -> float:
         """HBM left for serving state after weights (+10% activations)."""
         return self.inst.hbm_bytes - 1.1 * self.weight_bytes
+
+    @cached_property
+    def line_costs(self) -> "LineCosts":
+        """The shared per-line cost card (``repro.kvstore.LineCosts``)
+        the SimStore ledger and the live PagedStore both charge from."""
+        from repro.kvstore import LineCosts
+        return LineCosts.from_config(self.cfg, DTYPE_BYTES)
 
     # -- prefill (compute-bound, §3.2) --------------------------------------
     def prefill_flops(self, prompt_lens: Sequence[int]) -> float:
@@ -79,8 +97,7 @@ class PerfModel:
             return t / max(1, len(self.cfg.block_pattern))
         return t
 
-    def mirror_bytes_per_step(self, batch: int) -> float:
-        """Per-decode-step replica-update traffic: one new KV line per
-        request (§4.1.2 — 'minimal compared to prefill')."""
-        from repro.core.kvbytes import bytes_per_token
-        return batch * bytes_per_token(self.cfg, DTYPE_BYTES)
+    # per-step mirror traffic is priced by the KV-store ledger:
+    # SimStore.mirror_bytes_per_step (== LineCosts.mirror_bytes(1) per
+    # mirrored request, the quantity the live executor counts in
+    # stats['mirror_bytes'])

@@ -67,6 +67,19 @@ class SimInstanceView:
     def mem_free(self) -> float:
         return self._i.mem_free()
 
+    def free_blocks(self) -> int:
+        return self._i.free_blocks()
+
+    def primary_bytes(self) -> float:
+        costs = self._i.store.costs
+        return sum(costs.bytes_at(r.total_len)
+                   for r in self._i.decode_batch.values())
+
+    def replica_bytes(self) -> float:
+        costs = self._i.store.costs
+        return sum(costs.bytes_at(r.total_len)
+                   for r in self._i.replicas.values())
+
     def can_admit(self, req, taking: int = 0) -> bool:
         fits = self._i.mem_free() >= self._i.perf.kv_bytes(req.prompt_len)
         return fits and len(self._i.decode_batch) + taking < self._i.max_batch
@@ -99,6 +112,15 @@ class SimInstanceView:
     def replica_weights(self) -> Dict[int, float]:
         return {rid: self._i.perf.kv_bytes(r.total_len)
                 for rid, r in self._i.replicas.items()}
+
+    # -- mirror ledger --------------------------------------------------------
+    def request_lines(self) -> Dict[int, int]:
+        return {rid: r.total_len for rid, r in self._i.decode_batch.items()}
+
+    def replica_synced(self) -> Dict[int, int]:
+        # the simulator executes the mirror inside the decode-step cost,
+        # so a replica is current as of its request's last decode
+        return {rid: r.total_len for rid, r in self._i.replicas.items()}
 
 
 class SimClusterView:
@@ -376,7 +398,9 @@ class AcceLLMPolicy(KernelPolicy):
             mirrored = sum(1 for rid in inst.decode_batch
                            if self.placement.get(rid, (None, None))[1]
                            is not None)
-            t_link = (inst.perf.mirror_bytes_per_step(mirrored)
+            # mirror traffic charged from the shared ledger costs: one
+            # new KV line per mirrored request per step (§4.1.2)
+            t_link = (inst.store.mirror_bytes_per_step(mirrored)
                       / inst.perf.inst.link_bw)
             t = max(t, t_link)
         return t
