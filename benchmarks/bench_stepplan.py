@@ -1,0 +1,115 @@
+"""Step-plan microbenchmarks: what batched-bucketed prefill buys.
+
+Serves the same mixed-length prompt workload two ways on the reduced
+live engine (CPU):
+
+* **seed path** — one jitted prefill per prompt at its exact length with
+  a full-``kv_capacity`` scratch state: one XLA compile per distinct
+  prompt length (the seed `InstanceEngine.prefill_request` behavior),
+* **step-plan path** — prompts padded to power-of-two buckets
+  (``repro.stepplan.bucket_len``), scratch sized to the bucket, batched
+  up to 4 prompts per jitted call: compiles bounded by bucket shapes.
+
+Emits walltime (including compiles — that is the point) and compile
+counts, plus the scratch-state allocation of each path.  Writes a
+``BENCH_stepplan.json`` snapshot next to the repo root so CI keeps a
+machine-readable record; the acceptance bar is the step-plan path
+beating the seed path on BOTH walltime and compile count.
+"""
+import functools
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import SMOKE, emit
+from repro.configs import get_config
+from repro.models import init_params, init_state, prefill
+from repro.models.state import state_bytes
+from repro.serving import InstanceEngine, Request
+from repro.stepplan import PrefillItem, PrefillPlan, bucket_len
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_stepplan.json")
+
+
+def _prompts(cfg, n):
+    key = jax.random.PRNGKey(3)
+    # mixed-length workload: distinct lengths spread over two buckets
+    lens = [5 + (7 * i) % 60 for i in range(n)]
+    return [Request(prompt_len=p, max_new_tokens=1,
+                    prompt_tokens=jax.random.randint(
+                        jax.random.fold_in(key, i), (1, p), 0,
+                        cfg.vocab_size))
+            for i, p in enumerate(lens)]
+
+
+def main():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kv_capacity = 128 if SMOKE else 256
+    n = 6 if SMOKE else 16
+    snap = {}
+
+    # -- seed path: one exact-shape compile + full-window scratch per prompt
+    jit_legacy = jax.jit(functools.partial(prefill, cfg))
+    reqs = _prompts(cfg, n)
+    t0 = time.perf_counter()
+    for r in reqs:
+        fresh = init_state(cfg, 1, kv_capacity)
+        logits, fresh = jit_legacy(params, {"tokens": r.prompt_tokens}, fresh)
+        jax.block_until_ready(logits)
+    legacy_us = (time.perf_counter() - t0) * 1e6
+    legacy_compiles = jit_legacy._cache_size()
+    emit("stepplan_prefill_legacy", legacy_us / n,
+         f"n={n};compiles={legacy_compiles}")
+    snap["legacy_total_us"] = legacy_us
+    snap["legacy_compiles"] = legacy_compiles
+
+    # -- step-plan path: bucketed + batched through the engine
+    eng = InstanceEngine(cfg, params, num_slots=4, kv_capacity=kv_capacity)
+    reqs = _prompts(cfg, n)
+    t0 = time.perf_counter()
+    for i in range(0, n, 4):
+        group = reqs[i: i + 4]
+        bucket = bucket_len(max(r.prompt_len for r in group),
+                            cap=kv_capacity)
+        plan = PrefillPlan(0, tuple(
+            PrefillItem(r.rid, r.prompt_len, 0, r.prompt_len, req=r)
+            for r in group), bucket)
+        done = eng.prefill_batch(plan)
+        for slot in done.values():
+            eng.release(slot)
+    plan_us = (time.perf_counter() - t0) * 1e6
+    plan_compiles = eng._jit_prefill_batched._cache_size()
+    emit("stepplan_prefill_bucketed", plan_us / n,
+         f"n={n};compiles={plan_compiles};"
+         f"speedup={legacy_us / plan_us:.2f}x")
+    snap["bucketed_total_us"] = plan_us
+    snap["bucketed_compiles"] = plan_compiles
+    snap["walltime_speedup"] = legacy_us / plan_us
+
+    # -- scratch-state allocation: full window vs padded bucket
+    full_bytes = state_bytes(init_state(cfg, 1, kv_capacity))
+    bucket_bytes = state_bytes(init_state(
+        cfg, 1, bucket_len(max(r.prompt_len for r in reqs),
+                           cap=kv_capacity)))
+    emit("stepplan_scratch_bytes", 0.0,
+         f"full_window={full_bytes};bucket={bucket_bytes};"
+         f"reduction={full_bytes / bucket_bytes:.1f}x")
+    snap["scratch_bytes_full_window"] = full_bytes
+    snap["scratch_bytes_bucket"] = bucket_bytes
+
+    ok = (plan_us < legacy_us) and (plan_compiles < legacy_compiles)
+    snap["beats_seed_path"] = ok
+    emit("stepplan_beats_seed", 0.0, f"walltime_and_compiles={ok}")
+
+    with open(SNAPSHOT, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("stepplan_snapshot", 0.0, SNAPSHOT)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.bench_ablation",        # beyond-paper: redundancy on/off
     "benchmarks.bench_engine",          # real-engine microbench
     "benchmarks.bench_kvstore",         # paged KV store: mirror delta cost
+    "benchmarks.bench_stepplan",        # bucketed batch prefill vs seed path
 ]
 
 

@@ -197,14 +197,33 @@ class PagedStore:
 
     def merge_slot(self, slot: int, sub_state, src_slot: int = 0):
         """Install ``sub_state`` (batch dim 1 at ``src_slot``) into
-        ``slot``.  Batch is dim 1 for layer states (dim 0 is the segment
-        repeat dim) and dim 0 for ``enc_out``."""
+        ``slot``, whole-window (row bounds clamp to the smaller of the
+        two cache windows).  Batch is dim 1 for layer states (dim 0 is
+        the segment repeat dim) and dim 0 for ``enc_out``."""
+        self.merge_slot_rows(slot, sub_state, 0, self.kv_capacity,
+                             src_slot=src_slot)
 
-        def merge(d, s):
-            return d.at[:, slot].set(s[:, src_slot])
-
-        self.state["layers"] = jax.tree_util.tree_map(
-            merge, self.state["layers"], sub_state["layers"])
+    def merge_slot_rows(self, slot: int, sub_state, lo: int, hi: int,
+                        src_slot: int = 0):
+        """Install ``sub_state``'s batch row ``src_slot`` into ``slot``,
+        copying only KV rows ``[lo, hi)`` of the line-indexed leaves —
+        the merge for bucket-sized prefill scratch (whose cache window
+        may be smaller than the store's) and for resumed chunk writes.
+        Recurrent and static leaves copy whole; row bounds clamp to
+        whichever window is smaller."""
+        for i, pj, key, kind in self._paths:
+            dst = self.state["layers"][i][pj][key]
+            src = sub_state["layers"][i][pj][key]
+            if kind == "line":
+                h = min(hi, src.shape[2], dst.shape[2])
+                l = min(lo, h)
+                if h <= l:
+                    continue
+                self.state["layers"][i][pj][key] = dst.at[
+                    :, slot, l:h].set(src[:, src_slot, l:h])
+            else:
+                self.state["layers"][i][pj][key] = dst.at[:, slot].set(
+                    src[:, src_slot])
         if "enc_out" in self.state:
             self.state["enc_out"] = self.state["enc_out"].at[slot].set(
                 sub_state["enc_out"][src_slot])

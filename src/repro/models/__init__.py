@@ -1,5 +1,6 @@
 from repro.models.model import (decode_step, forward_mtp, forward_train,
-                                init_params, init_state, prefill)
+                                init_params, init_state, prefill,
+                                prefill_batched, prefill_chunk)
 
 __all__ = ["init_params", "forward_train", "forward_mtp", "init_state",
-           "prefill", "decode_step"]
+           "prefill", "prefill_batched", "prefill_chunk", "decode_step"]

@@ -249,6 +249,8 @@ def gqa_forward(
     window: Optional[int] = None,
     update_cache: bool = False,
     causal: bool = True,
+    history: int = 0,               # static: cached KV rows [0, history)
+                                    # precede this chunk (chunked prefill)
 ) -> Tuple[Array, Optional[dict]]:
     B, S, D = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -260,7 +262,25 @@ def gqa_forward(
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
-    if mode == "full":
+    if mode == "full" and history:
+        # chunked-prefill continuation: this chunk's queries attend to
+        # the previously cached rows (already roped at their absolute
+        # positions) plus the chunk itself; new rows land at [t, t+S).
+        assert state is not None and causal
+        k_all = jnp.concatenate(
+            [state["k"][:, :history].astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate(
+            [state["v"][:, :history].astype(v.dtype), v], axis=1)
+        out = flash_attention(q, k_all, v_all, causal=True, scale=scale,
+                              window=window, q_offset=history)
+        new_state = state
+        if update_cache:
+            cap = state["k"].shape[1]
+            t0 = t if t is not None else jnp.int32(history)
+            new_state = dict(state)
+            new_state["k"] = ring_write(state["k"], k, t0, cap)
+            new_state["v"] = ring_write(state["v"], v, t0, cap)
+    elif mode == "full":
         if _use_pallas() and q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
             from repro.kernels.flash_attention import flash_attention_pallas
             out = flash_attention_pallas(q, k, v, causal=causal, scale=scale,
@@ -376,6 +396,7 @@ def mla_forward(
     window: Optional[int] = None,
     update_cache: bool = False,
     causal: bool = True,
+    history: int = 0,
 ):
     m = cfg.mla
     B, S, _ = x.shape
@@ -390,9 +411,23 @@ def mla_forward(
         k_nope, v = kvb[..., :nope], kvb[..., nope:]
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, h, rope))], -1)
+        if history:
+            # chunked-prefill continuation: expand the cached latent rows
+            # [0, history) (already normed + roped) the same way
+            assert state is not None and causal
+            ckv_h = state["c_kv"][:, :history].astype(c_kv.dtype)
+            krope_h = state["k_rope"][:, :history].astype(k_rope.dtype)
+            kvb_h = (ckv_h @ params["wkv_b"]).reshape(B, history, h,
+                                                      nope + vd)
+            k_h = jnp.concatenate(
+                [kvb_h[..., :nope],
+                 jnp.broadcast_to(krope_h[:, :, None], (B, history, h, rope))],
+                -1)
+            k = jnp.concatenate([k_h, k], axis=1)
+            v = jnp.concatenate([kvb_h[..., nope:], v], axis=1)
         q = jnp.concatenate([q_nope, q_rope], -1)
         out = flash_attention(q, k, v, causal=causal, scale=scale,
-                              window=window)
+                              window=window, q_offset=history)
         new_state = state
         if update_cache and state is not None:
             cap = state["c_kv"].shape[1]

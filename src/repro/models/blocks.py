@@ -126,7 +126,8 @@ def apply_layer(cfg: ModelConfig, spec: LayerSpec, params, x: Array,
         h, new_state = attention_forward(
             cfg, params["mixer"], h_in, positions=ctx["positions"],
             t=ctx.get("t"), window=ctx.get("window"),
-            causal=ctx.get("causal", True), **kw)
+            causal=ctx.get("causal", True),
+            history=ctx.get("history", 0), **kw)
     elif spec.block == "mamba":
         h, new_state = mamba_mod.mamba_forward(cfg, params["mixer"], h_in, **kw)
     elif spec.block == "mlstm":

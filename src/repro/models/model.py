@@ -255,6 +255,61 @@ def prefill(cfg: ModelConfig, params, batch: Dict[str, Array], state,
     return _head(cfg, params, x)[:, 0], state
 
 
+def prefill_batched(cfg: ModelConfig, params, tokens: Array, state,
+                    lengths: Array, long_context: bool = False
+                    ) -> Tuple[Array, Any]:
+    """Right-padded multi-prompt prefill: ``tokens`` (B, L) with each
+    row's true length in ``lengths`` (B,); returns per-row logits at the
+    last *real* token and the filled caches.
+
+    Only valid for decoder-only attention stacks (the step-plan layer's
+    batched-bucketed path): padded positions write garbage K/V rows
+    beyond each row's length, which the per-request decode clocks mask —
+    a recurrent block would fold the padding into its state, so hybrid /
+    xLSTM / enc-dec models use the unpadded single-prompt path instead.
+    """
+    segs = _segs(cfg)
+    window = _window(cfg, long_context)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = _embed_tokens(cfg, params, tokens, positions)
+    ctx = {"mode": "full", "positions": positions, "update_cache": True,
+           "t": jnp.int32(0), "window": window,
+           "seq_shard": _seq_shard_ok(S)}
+    layers, = (state["layers"],)
+    x, layers, _ = apply_stack(cfg, segs, params["segments"], x, layers, ctx)
+    state = dict(state, layers=layers)
+    last = x[jnp.arange(B), lengths - 1]
+    last = rms_norm(last, params["final_norm"], cfg.rms_norm_eps)
+    return _head(cfg, params, last), state
+
+
+def prefill_chunk(cfg: ModelConfig, params, tokens: Array, state,
+                  history: int, long_context: bool = False
+                  ) -> Tuple[Array, Any]:
+    """Resumable chunked prefill (Sarathi-style, executed for real):
+    process ``tokens`` (B, C) at absolute positions [history, history+C)
+    against a cache whose first ``history`` rows are already filled by
+    earlier chunks.  Returns logits at the chunk's last token (only
+    meaningful on the final chunk) and the extended caches.
+
+    ``history`` is static (one compile per (chunk shape, cursor));
+    attention-only stacks only — recurrent state continuation across
+    chunks is not implemented."""
+    segs = _segs(cfg)
+    window = _window(cfg, long_context)
+    B, C = tokens.shape
+    positions = history + jnp.arange(C)
+    x = _embed_tokens(cfg, params, tokens, positions)
+    ctx = {"mode": "full", "positions": positions, "update_cache": True,
+           "t": jnp.int32(history), "window": window, "history": history}
+    layers, = (state["layers"],)
+    x, layers, _ = apply_stack(cfg, segs, params["segments"], x, layers, ctx)
+    state = dict(state, layers=layers)
+    x = rms_norm(x[:, -1], params["final_norm"], cfg.rms_norm_eps)
+    return _head(cfg, params, x), state
+
+
 def decode_step(cfg: ModelConfig, params, tokens: Array, state, t: Array,
                 long_context: bool = False) -> Tuple[Array, Any]:
     """One decode step: tokens (B,1) at clock t -> (logits (B,V), state).

@@ -35,6 +35,9 @@ class AcceLLMScheduler(SchedulerPolicy):
     name = "accellm"
     requires_pairs = True
     requeue_unplaced = True
+    #: §4.2.3: prefill and decode are never co-scheduled on one
+    #: instance — the step planner raises on any mixed plan.
+    allow_mixed = False
 
     def __init__(self, redundancy: bool = True, swap_margin: int = 1):
         self.redundancy = redundancy

@@ -10,15 +10,21 @@ instance index, which is the same numbering on both backends
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Union
 
 
 @dataclass(frozen=True)
 class Prefill:
-    """Run the prompt of ``rid`` on ``instance``."""
+    """Run the prompt of ``rid`` on ``instance``.  Carries the prompt
+    length (and, for executors, the request record itself) so the step
+    planner can bucket and chunk the work without backend lookups."""
     rid: int
     instance: int
+    prompt_len: int = 0
+    #: backend request record (live ``Request`` / ``SimRequest``);
+    #: excluded from action equality.
+    req: object = field(default=None, compare=False, repr=False)
 
 
 @dataclass(frozen=True)

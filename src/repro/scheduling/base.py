@@ -38,6 +38,15 @@ class SchedulerPolicy:
     #: iteration (policies that re-route every step) instead of leaving
     #: them in the per-instance backlog.
     requeue_unplaced = False
+    #: May prefill and decode be co-scheduled on one instance in one
+    #: iteration?  The step planner (repro.stepplan) enforces this: with
+    #: ``False`` it raises instead of building a MixedPlan — the home of
+    #: the AcceLLM §4.2.3 invariant.
+    allow_mixed = True
+    #: Per-iteration prompt-token budget for chunked prefill
+    #: (Sarathi-style); ``None`` disables chunking.  Consumed by the
+    #: step planner, which keeps the resumable chunk cursors.
+    chunk_tokens: Optional[int] = None
 
     # -- routing ------------------------------------------------------------
     def admissions_per_step(self, cluster: ClusterView) -> int:

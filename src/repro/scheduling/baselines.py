@@ -13,11 +13,11 @@ both the live-engine executor and the simulator.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 from repro.scheduling.actions import Action, StreamState
-from repro.scheduling.base import (MAX_PREFILL_BATCH, ROLE_DECODE, ROLE_IDLE,
-                                   ROLE_PREFILL, SchedulerPolicy)
+from repro.scheduling.base import (ROLE_DECODE, ROLE_IDLE, ROLE_PREFILL,
+                                   SchedulerPolicy)
 from repro.scheduling.views import ClusterView, RequestView
 
 
@@ -36,42 +36,22 @@ class VLLMScheduler(SchedulerPolicy):
 
 
 class SarathiScheduler(VLLMScheduler):
+    """Chunked prefill: the kernel only declares the per-iteration
+    prompt-token budget (``chunk_tokens``); the step planner
+    (:mod:`repro.stepplan`) spends it — splitting prompts into resumable
+    chunks co-scheduled with decode — identically on both backends, so
+    a prompt longer than the budget actually chunks on real hardware
+    instead of banking admission credit."""
     name = "sarathi"
 
     def __init__(self, chunk_tokens: int = 512):
         self.chunk_tokens = chunk_tokens
-        self._credit = {}    # instance -> unspent prompt-token budget
-
-    def prefill_batch(self, cluster: ClusterView, instance: int,
-                      pending: Sequence[RequestView]) -> int:
-        """Admit whole prompts under a per-iteration chunk budget.  The
-        simulator adapter models true intra-prompt chunking; on the
-        iteration-clocked live executor this budget is the equivalent
-        bound on prompt work per iteration: while the queue head is too
-        long for the accumulated credit, credit keeps building — the
-        iterations a real Sarathi would spend chunking through the
-        prompt — so every prompt eventually starts."""
-        inst = cluster.instances()[instance]
-        credit = self._credit.get(instance, 0) + self.chunk_tokens
-        n = 0
-        blocked_on_credit = False
-        for req in pending:
-            if n >= MAX_PREFILL_BATCH or not inst.can_admit(req, taking=n):
-                break
-            if req.prompt_len > credit:
-                blocked_on_credit = True
-                break
-            credit -= req.prompt_len
-            n += 1
-        # bank credit only while a prompt is actually waiting on it;
-        # otherwise clamp so idle iterations don't accumulate budget
-        self._credit[instance] = (credit if blocked_on_credit
-                                  else min(credit, self.chunk_tokens))
-        return n
 
 
 class SplitwiseScheduler(SchedulerPolicy):
     name = "splitwise"
+    #: static disaggregation never co-schedules phases on one instance
+    allow_mixed = False
 
     def __init__(self, n_prefill: int = 1):
         self.n_prefill = n_prefill

@@ -17,11 +17,14 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
 from repro.configs.base import ModelConfig
-from repro.scheduling.actions import (Action, EvictReplica, MirrorSync,
-                                      PromoteReplica, StreamState)
+from repro.scheduling.actions import (Action, Decode, EvictReplica,
+                                      MirrorSync, Prefill, PromoteReplica,
+                                      StreamState)
 from repro.scheduling.base import ROLE_MIXED, ROLE_PREFILL, SchedulerPolicy
 from repro.serving.engine import InstanceEngine
 from repro.serving.request import Phase, Request
+from repro.stepplan import (Planner, PrefillPlan, decode_part,
+                            prefill_part)
 from repro.workloads import IterationClock, TimelinePoint
 from repro.workloads.spec import RequestSource
 
@@ -84,11 +87,18 @@ class LiveInstanceView:
         return len(self._eng.slot_req)
 
     def prefill_backlog(self) -> int:
-        return len(self._c._pending[self._index])
+        # in-progress chunked prompts count: they still demand prefill
+        # iterations (the policy keeps the instance in a prefill role)
+        return (len(self._c._pending[self._index])
+                + len(self._c._chunking[self._index]))
 
     def prefill_backlog_tokens(self) -> int:
-        return sum(req.prompt_len
-                   for req, _ in self._c._pending[self._index])
+        # planner feedback: chunk cursors shrink the remaining backlog
+        planner = self._c.planner
+        return (sum(req.prompt_len
+                    for req, _ in self._c._pending[self._index])
+                + sum(req.prompt_len - planner.cursor(req.rid)
+                      for req in self._c._chunking[self._index]))
 
     def decode_weights(self) -> Dict[int, float]:
         # decode_read_bytes == ledger bytes at the request's lines
@@ -160,6 +170,24 @@ class LiveCluster:
         self.queue: List[Tuple[Request, Optional[dict]]] = []
         self._pending: List[List[Tuple[Request, Optional[dict]]]] = [
             [] for _ in range(n_instances)]
+        #: shared step planner: buckets/chunks prefill work and enforces
+        #: the policy's phase-mixing contract (§4.2.3).  No max_bucket
+        #: clamp — plans must match the simulator's bit for bit; the
+        #: engine clamps scratch to its cache window at execution time.
+        self.planner = Planner.for_policy(policy)
+        # the live executor runs plans, it never prices them: skip the
+        # per-iteration decode ledger summaries unless a trace wants them
+        self.planner.decode_details = False
+        if not self.engines[0].supports_chunked_prefill:
+            # recurrent/enc-dec/modality stacks cannot resume a prompt
+            # mid-chunk (state continuation is not implemented): the
+            # chunk budget degrades to a whole-prompt admission
+            # throttle instead of crashing mid-serve
+            self.planner.chunk_execution = False
+        #: per-instance requests mid-chunked-prefill (slot held, cursor
+        #: tracked by the planner)
+        self._chunking: List[List[Request]] = [[] for _ in range(n_instances)]
+        self._extras: Dict[int, Optional[dict]] = {}
         self.placements: Dict[int, Placement] = {}
         self._reqs: Dict[int, Request] = {}
         self.clock = IterationClock()
@@ -212,59 +240,86 @@ class LiveCluster:
             self._pending[target].append((req, extra))
             admitted += 1
 
-        # 2. roles + prefill
+        # 2. roles -> declarative step actions; the planner compiles them
+        # into per-instance plans (bucketing, chunk cursors, and the
+        # §4.2.3 no-mixing invariant all live there, not here)
         roles = {i: self.policy.choose_roles(view, i)
                  for i in range(len(self.engines))}
-        exclusive_prefill = set()
+        actions: List[Action] = []
+        taken_now: Dict[int, List[Tuple[Request, Optional[dict]]]] = {}
+        for idx, eng in enumerate(self.engines):
+            pf_actions: List[Action] = []
+            if roles[idx] in (ROLE_PREFILL, ROLE_MIXED):
+                for req in self._chunking[idx]:
+                    pf_actions.append(Prefill(req.rid, idx, req.prompt_len,
+                                              req=req))
+                if self._pending[idx]:
+                    n = self.policy.prefill_batch(
+                        view, idx, [r for r, _ in self._pending[idx]])
+                    for _ in range(n):
+                        if not self._pending[idx]:
+                            break
+                        req, extra = self._pending[idx][0]
+                        if not eng.free_slots():
+                            for act in self.policy.evict(
+                                    view, [view.instances()[idx]]):
+                                self._apply(act)
+                        if not eng.free_slots():
+                            break
+                        self._pending[idx].pop(0)
+                        taken_now.setdefault(idx, []).append((req, extra))
+                        self._extras[req.rid] = extra
+                        pf_actions.append(Prefill(req.rid, idx,
+                                                  req.prompt_len, req=req))
+            actions.extend(pf_actions)
+            # an instance only forgoes decode when it actually prefills
+            # under an exclusive-prefill role (§4.2.3); the decode batch
+            # membership is resolved at execution time — a request
+            # streamed in after prefill decodes this same iteration
+            if roles[idx] != ROLE_PREFILL or not pf_actions:
+                actions.append(Decode(idx))
+        plans = self.planner.compile(actions, view)
+
+        # chunk budget may not have reached every admitted request this
+        # iteration: return the unplanned ones to the head of the backlog
+        planned_rids = set()
+        for plan in plans:
+            pf = prefill_part(plan)
+            if pf is not None:
+                planned_rids.update(it.rid for it in pf.items)
+        for idx, taken in taken_now.items():
+            unplanned = [(r, e) for r, e in taken
+                         if r.rid not in planned_rids]
+            if unplanned:
+                self._pending[idx][:0] = unplanned
+
+        # 3. execute the plans in the executor's phase order: all
+        # prefills, then post-prefill placement, then all decodes — so a
+        # request streamed to its decode primary still joins that
+        # instance's decode batch within the same iteration
         prefilled = set()
         decoded = set()
         newly: List[Tuple[int, Request]] = []
-        for idx, eng in enumerate(self.engines):
-            if roles[idx] not in (ROLE_PREFILL, ROLE_MIXED):
-                continue
-            if not self._pending[idx]:
-                continue
-            n = self.policy.prefill_batch(
-                view, idx, [r for r, _ in self._pending[idx]])
-            did = False
-            for _ in range(n):
-                req, extra = self._pending[idx][0]
-                if not eng.free_slots():
-                    for act in self.policy.evict(view, [view.instances()[idx]]):
-                        self._apply(act)
-                if not eng.free_slots():
-                    break
-                self._pending[idx].pop(0)
-                slot = eng.prefill_request(req, extra)
-                req.first_token_time = self.now
-                req.token_times.append(self.now)
-                self.placements[req.rid] = Placement(primary=(idx, slot))
-                self._reqs[req.rid] = req
-                self.stats["prefills"] += 1
-                did = True
-                if req.done:          # degenerate max_new_tokens == 1
-                    req.phase = Phase.DONE
-                    eng.release(slot)
-                    continue
-                newly.append((idx, req))
-            if did:
-                prefilled.add(idx)
-            if did and roles[idx] == ROLE_PREFILL:
-                exclusive_prefill.add(idx)
+        for plan in plans:
+            pf = prefill_part(plan)
+            if pf is not None:
+                self._execute_prefill(pf, newly, prefilled)
 
-        # 3. post-prefill placement (§4.1.2 streaming / Splitwise transfer)
+        # 4. post-prefill placement (§4.1.2 streaming / Splitwise
+        # transfer), wrapped into transfer plans
         for idx, req in newly:
-            for act in self.policy.place_after_prefill(view, idx, req):
-                self._apply(act)
+            self._apply_transfers(
+                self.policy.place_after_prefill(view, idx, req), view)
 
-        # 4. decode on every instance not exclusively prefilling
-        for idx, eng in enumerate(self.engines):
-            if idx in exclusive_prefill or not eng.slot_req:
+        for plan in plans:
+            dc = decode_part(plan)
+            if dc is None or not self.engines[dc.instance].slot_req:
                 continue
+            eng = self.engines[dc.instance]
             live = [eng.slot_req[s] for s in eng.active_slots()]
             if eng.decode():
                 self.stats["decode_steps"] += 1
-                decoded.add(idx)
+                decoded.add(dc.instance)
             for req in live:
                 req.token_times.append(self.now)
 
@@ -272,15 +327,13 @@ class LiveCluster:
         self._release_finished()
 
         # 6. mirror newly generated lines into replicas (§4.1.2)
-        for act in self.policy.sync(view):
-            self._apply(act)
+        self._apply_transfers(self.policy.sync(view), view)
 
         # 7. pair-level load balancing via replica promotion (§4.1.3)
         if self.policy.requires_pairs:
             for pair_index in range(len(self.engines) // 2):
                 acts = self.policy.rebalance(view, pair_index)
-                for act in acts:
-                    self._apply(act)
+                self._apply_transfers(acts, view)
                 if acts:
                     self.stats["rebalances"] += 1
 
@@ -297,10 +350,53 @@ class LiveCluster:
         busy = prefilled | decoded
         self.timeline.append(TimelinePoint(
             t=self.now,
-            queue_depth=len(self.queue) + sum(len(p) for p in self._pending),
+            # mid-chunk prompts count as queued (the simulator keeps
+            # them in prefill_queue until the final chunk, so the two
+            # backends report comparable queue depths under chunking)
+            queue_depth=(len(self.queue) + sum(len(p) for p in self._pending)
+                         + sum(len(c) for c in self._chunking)),
             n_prefill=len(prefilled),
             n_decode=len(decoded - prefilled),
             n_idle=n - len(busy)))
+
+    # -- plan execution -------------------------------------------------------
+    def _execute_prefill(self, pf: PrefillPlan,
+                         newly: List[Tuple[int, Request]], prefilled: set):
+        eng = self.engines[pf.instance]
+        completed = eng.prefill_batch(pf, extras=self._extras)
+        # chunk bookkeeping: items still mid-prompt hold their slots
+        self._chunking[pf.instance] = [it.req for it in pf.items
+                                       if it.rid not in completed]
+        prefilled.add(pf.instance)
+        for it in pf.items:
+            slot = completed.get(it.rid)
+            if slot is None:
+                continue
+            req = it.req
+            self._extras.pop(req.rid, None)
+            # engines may complete ahead of the cursor (whole-prompt
+            # degrade for non-chunkable prompts): drop any stale cursor
+            self.planner.forget(req.rid)
+            req.first_token_time = self.now
+            req.token_times.append(self.now)
+            self.placements[req.rid] = Placement(primary=(pf.instance, slot))
+            self._reqs[req.rid] = req
+            self.stats["prefills"] += 1
+            if req.done:          # degenerate max_new_tokens == 1
+                req.phase = Phase.DONE
+                eng.release(slot)
+                continue
+            newly.append((pf.instance, req))
+
+    def _apply_transfers(self, acts: List[Action], view):
+        """Execute policy-emitted movement actions.  The live backend
+        moves real bytes, so it applies the actions directly; only the
+        simulator needs them wrapped into priced ``TransferPlan``s
+        (``Planner._wrap_transfer``) — wrapping here would rebuild the
+        per-request ledger dicts every mirror step for a result the
+        executor never reads."""
+        for act in acts:
+            self._apply(act)
 
     # -- action interpreter ---------------------------------------------------
     def _apply(self, act: Action):
@@ -403,6 +499,7 @@ class LiveCluster:
     def pending(self) -> int:
         live = len(self.queue) + len(self.placements)
         live += sum(len(p) for p in self._pending)
+        live += sum(len(c) for c in self._chunking)
         return live
 
     def run(self, max_steps: int = 10_000,

@@ -28,7 +28,8 @@ so prefill and decode are never co-scheduled on one instance).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import (TYPE_CHECKING, Dict, Iterable, List, Mapping, Optional,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +37,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kvstore import PagedStore
-from repro.models import decode_step, init_state, prefill
+from repro.models import (decode_step, init_state, prefill, prefill_batched,
+                          prefill_chunk)
 from repro.models.state import state_bytes
 from repro.serving.request import Phase, Request
 from repro.serving.sampling import sample
+
+if TYPE_CHECKING:  # runtime import is lazy: stepplan -> ... -> engine cycle
+    from repro.stepplan import PrefillItem, PrefillPlan  # noqa: F401
 
 
 class InstanceEngine:
@@ -61,10 +66,30 @@ class InstanceEngine:
         self.slot_req: Dict[int, Request] = {}
         # replica slots: requests whose primary lives on the paired instance
         self.replica_of: Dict[int, Tuple[int, int]] = {}  # slot -> (inst, slot)
+        # slots mid-chunked-prefill: occupied, but not yet decoding
+        self.prefilling: Dict[int, Request] = {}
         self._key = jax.random.PRNGKey(seed + instance_id)
         self._jit_decode = jax.jit(
             functools.partial(decode_step, cfg), donate_argnums=(2,))
         self._jit_prefill = jax.jit(functools.partial(prefill, cfg))
+        # bucketed batched prefill: one compile per (batch, bucket) shape
+        self._jit_prefill_batched = jax.jit(
+            functools.partial(prefill_batched, cfg))
+        # chunk resume: `history` is the static cursor
+        self._jit_prefill_chunk = jax.jit(
+            functools.partial(prefill_chunk, cfg),
+            static_argnames=("history",))
+        # the padded batched path and chunk resume need every KV row to
+        # be maskable by the decode clock — attention-only decoder stacks
+        self._attn_only = (all(b == "attn" for b in cfg.block_pattern)
+                           and not cfg.is_encoder_decoder
+                           and cfg.frontend is None)
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Whether this engine can resume a prompt mid-chunk (recurrent
+        state continuation across chunks is not implemented)."""
+        return self._attn_only
 
     @property
     def state(self):
@@ -76,7 +101,8 @@ class InstanceEngine:
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
-        used = set(self.slot_req) | set(self.replica_of)
+        used = (set(self.slot_req) | set(self.replica_of)
+                | set(self.prefilling))
         return [s for s in range(self.num_slots) if s not in used]
 
     def active_slots(self) -> List[int]:
@@ -117,18 +143,69 @@ class InstanceEngine:
     def prefill_request(self, req: Request, extra: Optional[dict] = None
                         ) -> int:
         """Run the prompt through the model into a free slot; returns the
-        slot."""
+        slot.  Thin wrapper over :meth:`prefill_batch` with a one-item
+        plan (scratch sized to the padded bucket, not kv_capacity)."""
+        from repro.stepplan import PrefillItem, PrefillPlan, bucket_len
+        item = PrefillItem(req.rid, req.prompt_len, 0, req.prompt_len,
+                           req=req)
+        plan = PrefillPlan(self.instance_id, (item,),
+                           bucket_len(req.prompt_len, cap=self.kv_capacity))
+        done = self.prefill_batch(plan, extras={req.rid: extra})
+        return done[req.rid]
+
+    def prefill_batch(self, plan: PrefillPlan,
+                      extras: Optional[Mapping[int, Optional[dict]]] = None
+                      ) -> Dict[int, int]:
+        """Execute one prefill step plan; returns {rid: slot} for every
+        request whose prefill *completed* this iteration.
+
+        Whole-prompt items on attention-only stacks run as ONE jitted
+        call, right-padded to ``plan.bucket_len`` (batch padded to a
+        power of two as well) — the jit cache is keyed by bucket shapes,
+        so a stream of arbitrary prompt lengths compiles O(log max_len)
+        kernels instead of one per length.  Scratch state is allocated
+        at the bucket length, not ``kv_capacity``.  Items that cannot
+        pad (modality extras, recurrent blocks, enc-dec, prompts beyond
+        the bucket) run the unpadded single-prompt path with
+        bucket-sized scratch.  Chunk items (``start > 0`` or partial
+        ``end``) resume through the KV ledger cursor."""
+        extras = extras or {}
+        completed: Dict[int, int] = {}
+        padded: List[PrefillItem] = []
+        for it in plan.items:
+            extra = extras.get(it.rid)
+            if extra is None and getattr(it.req, "extra", None):
+                extra = it.req.extra
+            if not (it.start == 0 and it.completes):
+                if (not self._attn_only or extra) and it.start == 0:
+                    # can't resume this prompt mid-chunk here: degrade
+                    # to one whole-prompt call rather than crash (the
+                    # caller sees it completed ahead of its cursor)
+                    completed[it.rid] = self._prefill_single(it.req, extra)
+                    continue
+                slot = self._prefill_chunk_item(it, extra)
+                if slot is not None:
+                    completed[it.rid] = slot
+            elif (self._attn_only and not extra
+                    and it.prompt_len <= min(plan.bucket_len,
+                                             self.kv_capacity)):
+                padded.append(it)
+            else:
+                completed[it.rid] = self._prefill_single(it.req, extra)
+        if padded:
+            # plan buckets are backend-agnostic; scratch is clamped to
+            # this engine's cache window at execution time
+            completed.update(self._prefill_padded(
+                padded, min(plan.bucket_len, self.kv_capacity)))
+        return completed
+
+    def _take_slot(self) -> int:
         free = self.free_slots()
         assert free, f"instance {self.instance_id} has no free slot"
-        slot = free[0]
-        batch = {"tokens": req.prompt_tokens}
-        if extra:
-            batch.update(extra)
-        fresh = init_state(self.cfg, 1, self.kv_capacity)
-        logits, fresh = self._jit_prefill(self.params, batch, fresh)
-        self._key, sub = jax.random.split(self._key)
-        tok = int(sample(logits, sub, self.temperature)[0])
-        self.store.merge_slot(slot, fresh)
+        return free[0]
+
+    def _finish_prefill(self, req: Request, slot: int, tok: int,
+                        ledgered: bool = False):
         self.lengths[slot] = req.prompt_len
         self.last_tokens[slot] = tok
         self.slot_req[slot] = req
@@ -136,7 +213,97 @@ class InstanceEngine:
         req.generated += 1
         req.output_tokens.append(tok)
         # ledger: prompt lines + the reserved line for the sampled token
-        self.store.alloc(req.rid, slot, lines=req.total_len)
+        if ledgered:
+            self.store.set_lines(req.rid, req.total_len)
+        else:
+            self.store.alloc(req.rid, slot, lines=req.total_len)
+
+    def _prefill_single(self, req: Request, extra: Optional[dict]) -> int:
+        """Unpadded single-prompt path (modality extras, recurrent or
+        enc-dec stacks); scratch sized to the prompt's bucket when the
+        batch is token-only, else the full window (prefix tokens /
+        encoder memory need the room)."""
+        slot = self._take_slot()
+        from repro.stepplan import bucket_len
+        batch = {"tokens": req.prompt_tokens}
+        if extra:
+            batch.update(extra)
+        window = (bucket_len(req.prompt_len, cap=self.kv_capacity)
+                  if self._attn_only and not extra else self.kv_capacity)
+        fresh = init_state(self.cfg, 1, window)
+        logits, fresh = self._jit_prefill(self.params, batch, fresh)
+        self._key, sub = jax.random.split(self._key)
+        tok = int(sample(logits, sub, self.temperature)[0])
+        self.store.merge_slot_rows(slot, fresh, 0, window)
+        self._finish_prefill(req, slot, tok)
+        return slot
+
+    def _prefill_padded(self, items: List[PrefillItem], bucket: int
+                        ) -> Dict[int, int]:
+        """Batched bucketed prefill: all items in one jitted call."""
+        from repro.stepplan import bucket_len
+        slots = self.free_slots()
+        assert len(slots) >= len(items), \
+            f"instance {self.instance_id}: {len(items)} prefills, " \
+            f"{len(slots)} free slots"
+        B = len(items)
+        Bp = bucket_len(B, floor=1)
+        toks = np.zeros((Bp, bucket), np.int32)
+        lens = np.ones((Bp,), np.int32)
+        for i, it in enumerate(items):
+            toks[i, :it.prompt_len] = np.asarray(it.req.prompt_tokens)[0]
+            lens[i] = it.prompt_len
+        fresh = init_state(self.cfg, Bp, bucket)
+        logits, fresh = self._jit_prefill_batched(
+            self.params, jnp.asarray(toks), fresh, jnp.asarray(lens))
+        self._key, sub = jax.random.split(self._key)
+        next_toks = np.asarray(sample(logits, sub, self.temperature))
+        out: Dict[int, int] = {}
+        for i, it in enumerate(items):
+            slot = slots[i]
+            self.store.merge_slot_rows(slot, fresh, 0, bucket, src_slot=i)
+            self._finish_prefill(it.req, slot, int(next_toks[i]))
+            out[it.rid] = slot
+        return out
+
+    def _prefill_chunk_item(self, it: PrefillItem, extra: Optional[dict]
+                            ) -> Optional[int]:
+        """One resumable chunk of a prompt; returns the slot when the
+        final chunk completes the prefill, else None."""
+        req = it.req
+        if not self._attn_only or extra:
+            raise NotImplementedError(
+                "chunked prefill needs an attention-only decoder stack "
+                "(recurrent state continuation across chunks is not "
+                "implemented) and a token-only batch")
+        if req.prompt_len > self.kv_capacity:
+            raise NotImplementedError(
+                f"chunked prefill of a {req.prompt_len}-token prompt "
+                f"would wrap the {self.kv_capacity}-line cache window")
+        if it.start == 0:
+            slot = self._take_slot()
+            self.prefilling[slot] = req
+            req.phase = Phase.PREFILL
+            self.store.alloc(req.rid, slot, lines=0)
+        else:
+            slot = self.store.rid_slot[req.rid]
+            assert self.prefilling.get(slot) is req
+        toks = req.prompt_tokens[:, it.start:it.end]
+        sub = self.store.extract_slot(slot)
+        logits, sub = self._jit_prefill_chunk(self.params, toks, sub,
+                                              history=it.start)
+        self.store.merge_slot_rows(slot, sub, it.start, it.end)
+        if not it.completes:
+            # cursor over the KV ledger: lines materialized so far.  The
+            # decode step this iteration writes a garbage row at the
+            # cursor for this slot; the next chunk overwrites it.
+            self.store.set_lines(req.rid, it.end)
+            self.lengths[slot] = it.end
+            return None
+        del self.prefilling[slot]
+        self._key, sub_key = jax.random.split(self._key)
+        tok = int(sample(logits, sub_key, self.temperature)[0])
+        self._finish_prefill(req, slot, tok, ledgered=True)
         return slot
 
     # -- decode ----------------------------------------------------------------
@@ -171,8 +338,12 @@ class InstanceEngine:
         pool."""
         self.slot_req.pop(slot, None)
         self.replica_of.pop(slot, None)
+        self.prefilling.pop(slot, None)
         freed = self.store.free_slot(slot)
         self.lengths[slot] = 0
+        # a stale token here would leak into a later occupant's first
+        # decode if any path ever read before writing; clear with lengths
+        self.last_tokens[slot] = 0
         return freed
 
     # -- redundancy primitives ---------------------------------------------------

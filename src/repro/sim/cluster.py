@@ -1,9 +1,12 @@
 """Discrete-event cluster simulator (paper §5.1).
 
-Instances execute *iterations* (a prefill batch or one decode step for the
-whole resident batch). The event loop keeps a heap of (time, event); a
-``Policy`` decides routing, roles, batching, KV movement and balancing —
-three policies reproduce the paper's systems (AcceLLM / Splitwise / vLLM).
+Instances execute *step plans* (:mod:`repro.stepplan`): a policy adapter
+compiles each iteration's scheduling actions into the same plan objects
+the live executor runs, and the event loop prices every one through the
+single cost entry point ``PerfModel.plan_time(plan)``.  The event loop
+keeps a heap of (time, event); a ``Policy`` decides routing, batching,
+KV movement and balancing — adapters in ``repro.sim.policies`` reproduce
+the paper's systems (AcceLLM / Splitwise / vLLM / Sarathi).
 """
 from __future__ import annotations
 
@@ -15,6 +18,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 from repro.kvstore import SimStore
 from repro.sim.perf import PerfModel
 from repro.sim.workload import SimRequest
+from repro.stepplan import (DecodePlan, MixedPlan, PrefillPlan, StepPlan,
+                            decode_part, prefill_part)
 from repro.workloads import ModeledSecondsClock, TimelinePoint
 from repro.workloads.spec import RequestSource
 
@@ -32,8 +37,8 @@ class SimInstance:
     # peak memory tracking (paper Fig. 9)
     peak_state_bytes: float = 0.0
     busy_time: float = 0.0
-    # current running iteration
-    _running: Optional[Tuple[str, tuple]] = None
+    # current running iteration: (StepPlan, decode-batch snapshot)
+    _running: Optional[Tuple[StepPlan, tuple]] = None
     #: block-table accounting ledger (repro.kvstore) — the same
     #: arithmetic the live PagedStore runs; (re)built in __post_init__
     store: Optional[SimStore] = None
@@ -86,8 +91,9 @@ class Policy:
     def route(self, req: SimRequest) -> Optional[SimInstance]:
         raise NotImplementedError
 
-    def next_action(self, inst: SimInstance):
-        """Return ("prefill", [reqs]) | ("decode",) | None."""
+    def next_plan(self, inst: SimInstance) -> Optional[StepPlan]:
+        """The instance's next iteration as a step plan (or None to
+        idle).  The event loop prices it via ``perf.plan_time``."""
         raise NotImplementedError
 
     def on_prefill_done(self, inst: SimInstance, reqs: List[SimRequest]):
@@ -99,10 +105,6 @@ class Policy:
         finished in it (explicitly, so policies can release per-request
         resources without scanning global history)."""
         pass
-
-    def decode_step_time(self, inst: SimInstance) -> float:
-        return inst.perf.decode_step_time(
-            [r.total_len for r in inst.decode_batch.values()])
 
 
 class Simulator:
@@ -146,34 +148,17 @@ class Simulator:
             return
         self._kicking.add(inst.iid)
         try:
-            action = self.policy.next_action(inst)
+            plan = self.policy.next_plan(inst)
         finally:
             self._kicking.discard(inst.iid)
-        if action is None:
+        if plan is None:
             return
-        kind = action[0]
-        override = getattr(self.policy, "action_time", None)
-        dur = override(inst, action) if override else None
-        if dur is not None:
-            pass
-        elif kind == "prefill":
-            reqs = action[1]
-            dur = self.perf.prefill_time([r.prompt_len for r in reqs])
-        elif kind == "decode":
-            if not inst.decode_batch:
-                return
-            dur = self.policy.decode_step_time(inst)
-        elif kind == "mixed":  # vLLM-style prefill+decode co-batching
-            reqs = action[1]
-            dur = (self.perf.prefill_time([r.prompt_len for r in reqs])
-                   + self.perf.decode_step_time(
-                       [r.total_len for r in inst.decode_batch.values()]))
-        else:
-            raise ValueError(kind)
+        # ONE cost entry point for every iteration shape (ISSUE 4
+        # acceptance): the plan the adapter compiled is priced as-is.
+        dur = self.perf.plan_time(plan)
         inst.busy = True
         inst.busy_time += dur
-        inst._running = (kind, tuple(action[1:]) if len(action) > 1 else (),
-                         tuple(inst.decode_batch))
+        inst._running = (plan, tuple(inst.decode_batch))
         self.push(self.now + dur, "inst_done", inst.iid)
 
     # -- event handlers -----------------------------------------------------------
@@ -187,17 +172,23 @@ class Simulator:
 
     def _handle_done(self, iid: int):
         inst = self.instances[iid]
-        kind, payload, batch_snapshot = inst._running
+        plan, batch_snapshot = inst._running
         inst.busy = False
         inst._running = None
-        if kind in ("prefill", "mixed"):
-            reqs = list(payload[0])
+        pf = prefill_part(plan)
+        dc = decode_part(plan)
+        if pf is not None:
+            # only items whose final chunk ran complete their prefill
+            # (they left the queue when the plan was compiled); partial
+            # chunks keep their request queued — the planner's cursor
+            # resumes it next iteration
+            reqs = [it.req for it in pf.items if it.completes]
             for r in reqs:
                 r.first_token_time = self.now
                 r.token_times.append(self.now)
                 r.generated += 1
             self.policy.on_prefill_done(inst, reqs)
-        if kind in ("decode", "mixed"):
+        if dc is not None:
             finished_now: List[SimRequest] = []
             for rid in batch_snapshot:
                 r = inst.decode_batch.get(rid)
@@ -225,8 +216,9 @@ class Simulator:
     def _sample_timeline(self):
         running = [i._running[0] if i.busy and i._running else None
                    for i in self.instances]
-        n_prefill = sum(1 for k in running if k in ("prefill", "mixed"))
-        n_decode = sum(1 for k in running if k == "decode")
+        n_prefill = sum(1 for p in running
+                        if isinstance(p, (PrefillPlan, MixedPlan)))
+        n_decode = sum(1 for p in running if isinstance(p, DecodePlan))
         self.timeline.append(TimelinePoint(
             t=self.now,
             queue_depth=sum(len(i.prefill_queue) for i in self.instances),

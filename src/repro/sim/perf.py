@@ -10,11 +10,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property
-from typing import Sequence
+from typing import Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.kvbytes import state_bytes_at
+from repro.scheduling.actions import MirrorSync, StreamState
 from repro.sim.devices import InstanceSpec
+from repro.stepplan import DecodePlan, MixedPlan, PrefillPlan, TransferPlan
 
 DTYPE_BYTES = 2
 
@@ -74,6 +76,28 @@ class PerfModel:
         t_mem = self.weight_bytes / self.inst.hbm_bw
         return max(t_compute, t_mem)
 
+    def chunked_prefill_time(self, chunks: Sequence[Tuple[int, int]]) -> float:
+        """Prefill time for resumed chunks ``(start, end)``: a chunk's
+        queries attend over ALL cached history rows ``[0, end)``, not
+        just the chunk — the cost the live ``prefill_chunk`` path
+        actually pays.  ``(0, s)`` degenerates to ``prefill_time([s])``
+        exactly."""
+        if not chunks:
+            return 0.0
+        n_active = self.cfg.param_count(active_only=True)
+        n_attn = sum(1 for b in self.cfg.block_pattern if b == "attn")
+        total = 0.0
+        for start, end in chunks:
+            c = end - start
+            total += 2.0 * n_active * c
+            # causal q*k pairs: c*start full-history plus c^2/2 in-chunk,
+            # scaled like prefill_flops' (s*s) convention (2 matmuls)
+            total += (2.0 * n_attn * (c * c + 2.0 * c * start)
+                      * self.cfg.num_heads * self.cfg.head_dim)
+        t_compute = total / (self.inst.tflops * 1e12)
+        t_mem = self.weight_bytes / self.inst.hbm_bw
+        return max(t_compute, t_mem)
+
     # -- decode (HBM-bound, §3.3) --------------------------------------------
     def decode_step_time(self, lengths: Sequence[int]) -> float:
         if not lengths:
@@ -83,6 +107,56 @@ class PerfModel:
         flops = 2.0 * self.cfg.param_count(active_only=True) * len(lengths)
         t_compute = flops / (self.inst.tflops * 1e12)
         return max(t_mem, t_compute)
+
+    # -- step plans (THE simulator cost entry point) --------------------------
+    def plan_time(self, plan) -> float:
+        """Price one :class:`repro.stepplan.StepPlan` — the simulator's
+        only step-cost entry point: ``sim/cluster.py`` and every policy
+        adapter charge iterations exclusively through here, so the cost
+        arithmetic for an iteration lives in one place, keyed by the
+        same plan objects the live executor runs.
+
+        * PrefillPlan — compute-bound prompt work over the items' real
+          chunk spans, including each resumed chunk's attention over
+          its cached history (bucket padding is a live-compile concern,
+          not modeled cost).
+        * DecodePlan  — HBM-bound batch step over the resident line
+          counts; when requests are mirrored, the per-step replica sync
+          (one KV line each over the pair link) may bound the step
+          instead (paper Fig. 10).
+        * MixedPlan   — prefill + decode co-batched: the sum (the vLLM
+          TBT spike of Fig. 5/16).
+        * TransferPlan — StreamState moves the whole state over the
+          link (per-layer overlapped when flagged, §4.2.4); MirrorSync
+          moves only its delta lines; role flips and evictions are
+          free.
+        """
+        if isinstance(plan, MixedPlan):
+            t = self.plan_time(plan.prefill)
+            if plan.decode is not None:
+                t += self.plan_time(plan.decode)
+            return t
+        if isinstance(plan, PrefillPlan):
+            return self.chunked_prefill_time(
+                [(it.start, it.end) for it in plan.items])
+        if isinstance(plan, DecodePlan):
+            t = self.decode_step_time(list(plan.lengths))
+            if plan.mirrored:
+                # mirror traffic charged from the shared ledger costs:
+                # one new KV line per mirrored request per step (§4.1.2)
+                t_link = (plan.mirrored * self.line_costs.mirror_bytes(1)
+                          / self.inst.link_bw)
+                t = max(t, t_link)
+            return t
+        if isinstance(plan, TransferPlan):
+            if isinstance(plan.action, StreamState):
+                return self.kv_transfer_time(
+                    plan.lines, overlap_layers=plan.overlap_layers)
+            if isinstance(plan.action, MirrorSync):
+                return (self.line_costs.mirror_bytes(plan.lines)
+                        / self.inst.link_bw)
+            return 0.0  # PromoteReplica / EvictReplica: zero-cost flips
+        raise TypeError(f"not a step plan: {plan!r}")
 
     # -- KV movement ----------------------------------------------------------
     def kv_bytes(self, length: int) -> float:

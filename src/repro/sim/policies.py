@@ -22,22 +22,27 @@ discrete-event simulator's analytic cost model:
                     count+state-bytes decode balancing, replica eviction
                     under memory pressure.
 
-Each adapter owns only simulator mechanics (event pushes, durations,
-busy-state handling); routing, role selection, placement, rebalancing and
-eviction decisions are delegated to its kernel.
+Each adapter owns only simulator mechanics (event pushes, busy-state
+handling); routing, role selection, placement, rebalancing and eviction
+decisions are delegated to its kernel, iteration *shapes* to the shared
+step planner (``repro.stepplan`` — the same bucketing/chunking/no-mixing
+rules the live executor compiles under), and iteration *costs* to the
+single entry point ``PerfModel.plan_time``.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
 from repro.scheduling.accellm import AcceLLMScheduler
-from repro.scheduling.actions import (EvictReplica, PromoteReplica,
-                                      StreamState)
+from repro.scheduling.actions import (Action, Decode, EvictReplica, Prefill,
+                                      PromoteReplica, StreamState)
 from repro.scheduling.base import MAX_PREFILL_BATCH, SchedulerPolicy
 from repro.scheduling.baselines import (SarathiScheduler, SplitwiseScheduler,
                                         VLLMScheduler)
 from repro.sim.cluster import Policy, SimInstance, Simulator
 from repro.sim.workload import SimRequest
+from repro.stepplan import (DecodePlan, Planner, StepPlan, TransferPlan,
+                            prefill_part)
 
 __all__ = ["AcceLLMPolicy", "VLLMPolicy", "SplitwisePolicy", "SarathiPolicy",
            "SimInstanceView", "SimClusterView", "MAX_PREFILL_BATCH"]
@@ -52,9 +57,11 @@ class SimInstanceView:
     """InstanceView over a SimInstance (see repro.scheduling.views)."""
 
     def __init__(self, inst: SimInstance,
-                 placement: Dict[int, Tuple[int, Optional[int]]]):
+                 placement: Dict[int, Tuple[int, Optional[int]]],
+                 planner: Optional[Planner] = None):
         self._i = inst
         self._placement = placement
+        self._planner = planner
 
     @property
     def index(self) -> int:
@@ -103,7 +110,11 @@ class SimInstanceView:
         return len(self._i.prefill_queue)
 
     def prefill_backlog_tokens(self) -> int:
-        return sum(r.prompt_len for r in self._i.prefill_queue)
+        # planner feedback, same as the live view: prompts mid-chunk
+        # count only their remaining (cursor-adjusted) tokens
+        cursor = self._planner.cursor if self._planner else (lambda rid: 0)
+        return sum(r.prompt_len - cursor(r.rid)
+                   for r in self._i.prefill_queue)
 
     def decode_weights(self) -> Dict[int, float]:
         return {rid: self._i.perf.kv_bytes(r.total_len)
@@ -127,8 +138,10 @@ class SimClusterView:
     """ClusterView over a Simulator (see repro.scheduling.views)."""
 
     def __init__(self, sim: Simulator,
-                 placement: Dict[int, Tuple[int, Optional[int]]]):
-        self._views = [SimInstanceView(i, placement) for i in sim.instances]
+                 placement: Dict[int, Tuple[int, Optional[int]]],
+                 planner: Optional[Planner] = None):
+        self._views = [SimInstanceView(i, placement, planner)
+                       for i in sim.instances]
         self._placement = placement
 
     def instances(self):
@@ -143,7 +156,8 @@ class SimClusterView:
 
 
 class KernelPolicy(Policy):
-    """Base adapter: binds a scheduling kernel to the simulator."""
+    """Base adapter: binds a scheduling kernel + the shared step planner
+    to the simulator."""
 
     kernel: SchedulerPolicy
     #: rid -> (primary iid, replica iid or None); empty for policies
@@ -153,17 +167,52 @@ class KernelPolicy(Policy):
     def __init__(self, kernel: SchedulerPolicy):
         self.kernel = kernel
         self.placement = {}
+        #: same configuration rule as the live executor: the kernel
+        #: declares mixing/chunking, the planner shapes iterations
+        self.planner = Planner.for_policy(kernel)
 
     @property
     def name(self):  # type: ignore[override]
         return self.kernel.name
 
     def view(self) -> SimClusterView:
-        return SimClusterView(self.sim, self.placement)
+        return SimClusterView(self.sim, self.placement, self.planner)
 
     def route(self, req: SimRequest) -> Optional[SimInstance]:
         idx = self.kernel.route(self.view(), req)
         return None if idx is None else self.sim.instances[idx]
+
+    # -- plan helpers ---------------------------------------------------------
+    def _compile(self, inst: SimInstance,
+                 actions: List[Action]) -> Optional[StepPlan]:
+        plans = self.planner.compile(actions, self.view())
+        if not plans:
+            return None
+        plan = plans[0]
+        # requests whose prefill completes within this plan leave the
+        # queue NOW (they are executing, not waiting — backlog views and
+        # queue-depth timelines must not count them, matching the live
+        # executor); prompts mid-chunk stay queued with their cursor
+        pf = prefill_part(plan)
+        if pf is not None:
+            done_rids = set(pf.completed_rids())
+            if done_rids:
+                inst.prefill_queue = [r for r in inst.prefill_queue
+                                      if r.rid not in done_rids]
+        return plan
+
+    def _queue_split(self, inst: SimInstance):
+        """Split the prefill queue into prompts mid-chunk (they resume
+        unconditionally) and fresh candidates (admission-gated)."""
+        in_prog = [r for r in inst.prefill_queue
+                   if self.planner.cursor(r.rid) > 0]
+        fresh = [r for r in inst.prefill_queue
+                 if self.planner.cursor(r.rid) == 0]
+        return in_prog, fresh
+
+    @staticmethod
+    def _prefill_actions(inst: SimInstance, reqs) -> List[Action]:
+        return [Prefill(r.rid, inst.iid, r.prompt_len, req=r) for r in reqs]
 
 
 # ---------------------------------------------------------------------------
@@ -176,18 +225,18 @@ class VLLMPolicy(KernelPolicy):
     def __init__(self, kernel: Optional[SchedulerPolicy] = None):
         super().__init__(kernel or VLLMScheduler())
 
-    def next_action(self, inst):
-        if inst.prefill_queue:
-            n = self.kernel.prefill_batch(self.view(), inst.iid,
-                                          inst.prefill_queue)
-            take = [inst.prefill_queue.pop(0) for _ in range(n)]
-            if take:
-                # co-batched prefill+decode iteration (the TBT spike)
-                return ("mixed", take) if inst.decode_batch else ("prefill",
-                                                                  take)
+    def next_plan(self, inst):
+        actions: List[Action] = []
+        in_prog, fresh = self._queue_split(inst)
+        take = list(in_prog)
+        if fresh:
+            n = self.kernel.prefill_batch(self.view(), inst.iid, fresh)
+            take += fresh[:n]
+        actions += self._prefill_actions(inst, take)
         if inst.decode_batch:
-            return ("decode",)
-        return None
+            # co-batched prefill+decode iteration (the TBT spike)
+            actions.append(Decode(inst.iid))
+        return self._compile(inst, actions)
 
     def on_prefill_done(self, inst, reqs):
         for r in reqs:
@@ -205,48 +254,16 @@ class VLLMPolicy(KernelPolicy):
 
 
 class SarathiPolicy(VLLMPolicy):
+    """Chunked prefill now lives in the shared step planner: the
+    per-iteration ``chunk_tokens`` budget is spent across the queue
+    (in-progress prompts first, cursors resumed against the ledger) and
+    the resulting MixedPlan is priced by ``PerfModel.plan_time`` — the
+    old ``_chunk_work`` side-channel and per-adapter cost override are
+    gone, and the identical planner drives the live engines."""
 
     def __init__(self, chunk_tokens: int = 512):
         super().__init__(SarathiScheduler(chunk_tokens))
         self.chunk_tokens = chunk_tokens
-        self._chunk_work: Dict[int, int] = {}   # iid -> tokens this iter
-
-    def next_action(self, inst):
-        # True intra-prompt chunking is a cost-model concern the event
-        # simulator can express exactly, so it stays here; admission limits
-        # on the iteration-clocked live executor use the kernel's
-        # prefill_batch budget instead.
-        completed: List[SimRequest] = []
-        budget = self.chunk_tokens
-        view = SimInstanceView(inst, self.placement)
-        while budget > 0 and inst.prefill_queue:
-            r = inst.prefill_queue[0]
-            if not view.can_admit(r, taking=len(completed)):
-                break
-            prog = getattr(r, "prefill_progress", 0)
-            take = min(r.prompt_len - prog, budget)
-            r.prefill_progress = prog + take
-            budget -= take
-            if r.prefill_progress >= r.prompt_len:
-                completed.append(inst.prefill_queue.pop(0))
-            # budget exhausted mid-request: loop exits via budget == 0
-        used = self.chunk_tokens - budget
-        self._chunk_work[inst.iid] = used
-        if used or completed:
-            return ("mixed", completed)
-        if inst.decode_batch:
-            return ("decode",)
-        return None
-
-    def action_time(self, inst, action):
-        if action[0] != "mixed":
-            return None
-        used = self._chunk_work.get(inst.iid, 0)
-        t = inst.perf.decode_step_time(
-            [r.total_len for r in inst.decode_batch.values()])
-        if used:
-            t += inst.perf.prefill_time([used])
-        return t
 
 
 # ---------------------------------------------------------------------------
@@ -265,17 +282,19 @@ class SplitwisePolicy(KernelPolicy):
         self.prefill_insts = sim.instances[: self.n_prefill]
         self.decode_insts = sim.instances[self.n_prefill:]
 
-    def next_action(self, inst):
+    def next_plan(self, inst):
         if inst in self.prefill_insts:
             if inst.prefill_queue:
                 take = inst.prefill_queue[:MAX_PREFILL_BATCH]
-                del inst.prefill_queue[:MAX_PREFILL_BATCH]
-                return ("prefill", take)
+                return self._compile(inst, self._prefill_actions(inst, take))
             return None
-        return ("decode",) if inst.decode_batch else None
+        if inst.decode_batch:
+            return self._compile(inst, [Decode(inst.iid)])
+        return None
 
     def on_prefill_done(self, inst, reqs):
-        # KV transfer to the decode instance is on the critical path
+        # KV transfer to the decode instance is on the critical path:
+        # priced as an un-overlapped whole-state TransferPlan
         for r in reqs:
             if r.done:
                 r.finish_time = self.sim.now
@@ -283,10 +302,11 @@ class SplitwisePolicy(KernelPolicy):
                 continue
             actions = self.kernel.place_after_prefill(self.view(), inst.iid,
                                                       r)
-            dst_iid = actions[0].dst if actions else inst.iid
-            dt = inst.perf.kv_transfer_time(r.prompt_len,
-                                            overlap_layers=False)
-            self.sim.push(self.sim.now + dt, "join_decode", (dst_iid, r))
+            act = (actions[0] if actions
+                   else StreamState(r.rid, src=inst.iid, dst=inst.iid))
+            dt = self.sim.perf.plan_time(TransferPlan(
+                inst.iid, act, lines=r.prompt_len, overlap_layers=False))
+            self.sim.push(self.sim.now + dt, "join_decode", (act.dst, r))
 
 
 # ---------------------------------------------------------------------------
@@ -320,32 +340,38 @@ class AcceLLMPolicy(KernelPolicy):
         return pb if inst is pa else pa
 
     # -- dynamic roles ---------------------------------------------------------
-    def next_action(self, inst):
+    def next_plan(self, inst):
         if inst.prefill_queue:
             view = SimInstanceView(inst, self.placement)
             take = []
-            while (inst.prefill_queue and len(take) < MAX_PREFILL_BATCH
-                   and view.can_admit(inst.prefill_queue[0],
-                                      taking=len(take))):
-                take.append(inst.prefill_queue.pop(0))
+            for r in inst.prefill_queue:
+                if (len(take) >= MAX_PREFILL_BATCH
+                        or not view.can_admit(r, taking=len(take))):
+                    break
+                take.append(r)
             if not take:
                 self._evict_replica(inst)  # memory pressure (§4.2.5)
                 if inst.prefill_queue and view.can_admit(
                         inst.prefill_queue[0]):
-                    take = [inst.prefill_queue.pop(0)]
+                    take = [inst.prefill_queue[0]]
             if take:
                 # before flipping to prefill, hand this side's decode work
                 # to the partner via replica promotion (zero cost) so token
                 # generation never stalls — the crux of §4.1.1/Fig. 6.
+                # (never a MixedPlan: the planner would refuse, §4.2.3)
                 self._handoff_decodes(inst)
-                return ("prefill", take)
+                return self._compile(inst, self._prefill_actions(inst, take))
         if inst.decode_batch:
-            return ("decode",)
+            # the DecodePlan carries the mirrored-request count, so the
+            # per-step replica sync bound (Fig. 10) is priced centrally
+            # by PerfModel.plan_time, not by an adapter override
+            return self._compile(inst, [Decode(inst.iid)])
         return None
 
     def _handoff_decodes(self, inst):
         partner = self.partner(inst)
-        if partner.busy and partner._running and partner._running[0] != "decode":
+        if (partner.busy and partner._running
+                and not isinstance(partner._running[0], DecodePlan)):
             return
         for rid in list(inst.decode_batch):
             pl = self.placement.get(rid, (None, None))
@@ -389,21 +415,6 @@ class AcceLLMPolicy(KernelPolicy):
             if rep_iid is not None:
                 self.sim.instances[rep_iid].note_peak()
         self.sim.kick(partner)
-
-    # -- decode: mirror traffic may bound the step (Fig. 10) -------------------
-    def decode_step_time(self, inst):
-        t = inst.perf.decode_step_time(
-            [r.total_len for r in inst.decode_batch.values()])
-        if self.redundancy:
-            mirrored = sum(1 for rid in inst.decode_batch
-                           if self.placement.get(rid, (None, None))[1]
-                           is not None)
-            # mirror traffic charged from the shared ledger costs: one
-            # new KV line per mirrored request per step (§4.1.2)
-            t_link = (inst.store.mirror_bytes_per_step(mirrored)
-                      / inst.perf.inst.link_bw)
-            t = max(t, t_link)
-        return t
 
     def on_decode_done(self, inst, finished):
         # drop replicas of exactly the requests that finished this

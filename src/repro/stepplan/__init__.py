@@ -1,0 +1,16 @@
+"""Step-plan layer: one execution-plan vocabulary, two backends.
+
+``Planner.compile(actions, view)`` turns a scheduling iteration's
+declarative actions into :class:`StepPlan` objects; the live executor
+runs them on real engines, the simulator prices them through
+``PerfModel.plan_time(plan)``.  See docs/ARCHITECTURE.md §"Step-plan
+layer"."""
+from repro.stepplan.planner import Planner
+from repro.stepplan.plans import (DecodePlan, MixedPlan, PlanError,
+                                  PrefillItem, PrefillPlan, StepPlan,
+                                  TransferPlan, bucket_len, decode_part,
+                                  prefill_part)
+
+__all__ = ["Planner", "PlanError", "StepPlan", "PrefillItem", "PrefillPlan",
+           "DecodePlan", "MixedPlan", "TransferPlan", "bucket_len",
+           "prefill_part", "decode_part"]

@@ -1,0 +1,242 @@
+"""The shared step planner: scheduling actions -> execution plans.
+
+``Planner.compile(actions, view)`` groups one iteration's declarative
+actions into per-instance :mod:`repro.stepplan.plans` objects.  Both
+backends run one planner instance per executor, configured from the same
+policy kernel (``Planner.for_policy``), so an iteration's shape — what
+is batched, how prompts are bucketed and chunked, whether prefill may
+co-schedule with decode — is decided in exactly one place:
+
+* **Bucketing** — whole-prompt items share a power-of-two
+  ``bucket_len`` (the live backend's jit cache key; the sim prices real
+  token counts).
+* **Chunking** — with ``chunk_tokens`` set (Sarathi), the per-iteration
+  prompt-token budget is spent across the prefill actions in order,
+  in-progress prompts first; cursors are tracked here and resumed on the
+  next compile, so a prompt longer than the budget spans iterations on
+  *either* backend.
+* **The §4.2.3 invariant** — a policy with ``allow_mixed = False``
+  (AcceLLM, Splitwise) can never see prefill and decode co-scheduled on
+  one instance: compile raises :class:`PlanError` instead of producing a
+  :class:`MixedPlan`.
+
+Transfer actions (``StreamState`` / ``MirrorSync`` / ``PromoteReplica``
+/ ``EvictReplica``) are wrapped into :class:`TransferPlan` with the line
+counts the cost model needs, resolved against the view's ledger.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+
+from repro.stepplan.plans import (DecodePlan, MixedPlan, PlanError,
+                                  PrefillItem, PrefillPlan, StepPlan,
+                                  TransferPlan, bucket_len)
+
+if TYPE_CHECKING:  # runtime import would cycle: scheduling -> live -> here
+    from repro.scheduling.actions import Action, Prefill
+
+
+class Planner:
+    def __init__(self, allow_mixed: bool = True,
+                 chunk_tokens: Optional[int] = None,
+                 bucket_floor: int = 16,
+                 max_bucket: Optional[int] = None):
+        if chunk_tokens is not None and chunk_tokens <= 0:
+            raise ValueError(f"chunk_tokens must be positive: {chunk_tokens}")
+        self.allow_mixed = allow_mixed
+        self.chunk_tokens = chunk_tokens
+        self.bucket_floor = bucket_floor
+        self.max_bucket = max_bucket
+        #: False when the executor cannot resume prompts mid-chunk
+        #: (recurrent stacks): the chunk budget then throttles how many
+        #: WHOLE prompts are planned per iteration instead of splitting
+        #: them, so Sarathi's bounded-work-per-iteration contract
+        #: survives on every backend.
+        self.chunk_execution = True
+        #: False for executors that never price plans (the live
+        #: backend): DecodePlan lengths/mirrored are ledger-dict builds
+        #: per instance per iteration, wasted when nothing reads them.
+        #: Tracing re-enables them regardless (golden-trace equality).
+        self.decode_details = True
+        #: rid -> prompt tokens already prefilled (resumable chunk
+        #: cursors; entries exist only while a prompt is mid-chunk).
+        self._cursors: Dict[int, int] = {}
+        #: optional normalized plan log (golden-trace consistency tests)
+        self.trace: Optional[list] = None
+
+    @classmethod
+    def for_policy(cls, policy, max_bucket: Optional[int] = None) -> "Planner":
+        """Configure a planner from a ``SchedulerPolicy`` kernel: the
+        kernel declares whether it mixes phases (``allow_mixed``) and its
+        chunk budget (``chunk_tokens``)."""
+        return cls(allow_mixed=getattr(policy, "allow_mixed", True),
+                   chunk_tokens=getattr(policy, "chunk_tokens", None),
+                   max_bucket=max_bucket)
+
+    # -- cursor feedback ------------------------------------------------------
+    def cursor(self, rid: int) -> int:
+        """Prompt tokens of ``rid`` already planned (0 = not started or
+        finished).  Executor views report chunk progress through this,
+        so policy kernels see planner feedback (backlog tokens shrink as
+        chunks land)."""
+        return self._cursors.get(rid, 0)
+
+    def forget(self, rid: int):
+        """Drop the chunk cursor of an abandoned request."""
+        self._cursors.pop(rid, None)
+
+    # -- compilation ----------------------------------------------------------
+    def compile(self, actions: Sequence["Action"], view) -> List[StepPlan]:
+        """Group one iteration's actions into per-instance plans.
+
+        Prefill/Decode actions merge into PrefillPlan / DecodePlan /
+        MixedPlan per instance (first-seen instance order); transfer
+        actions are wrapped in order after them."""
+        from repro.scheduling.actions import Decode, Prefill
+        prefills: Dict[int, List["Prefill"]] = {}
+        decodes = set()
+        order: List[int] = []
+        transfers: List["Action"] = []
+        for act in actions:
+            if isinstance(act, Prefill):
+                if act.instance not in prefills and act.instance not in decodes:
+                    order.append(act.instance)
+                prefills.setdefault(act.instance, []).append(act)
+            elif isinstance(act, Decode):
+                if act.instance not in prefills and act.instance not in decodes:
+                    order.append(act.instance)
+                decodes.add(act.instance)
+            else:
+                transfers.append(act)
+
+        plans: List[StepPlan] = []
+        for idx in order:
+            pplan = None
+            acts = prefills.get(idx, [])
+            items = self._plan_items(acts)
+            if items:
+                bucket = bucket_len(
+                    max((it.prompt_len for it in items if it.completes
+                         and it.start == 0), default=0),
+                    floor=self.bucket_floor, cap=self.max_bucket)
+                pplan = PrefillPlan(idx, tuple(items), bucket,
+                                    self.chunk_tokens)
+            dplan = self._decode_plan(idx, view) if idx in decodes else None
+            if pplan is not None and dplan is not None:
+                if not self.allow_mixed:
+                    raise PlanError(
+                        f"instance {idx}: prefill and decode co-scheduled in "
+                        f"one iteration, but this policy forbids mixing "
+                        f"(AcceLLM §4.2.3: prefill and decode are never "
+                        f"co-scheduled on one instance)")
+                plan: StepPlan = MixedPlan(idx, pplan, dplan)
+            else:
+                plan = pplan if pplan is not None else dplan
+            if plan is not None:
+                plans.append(plan)
+                self._note(plan)
+        for act in transfers:
+            plans.append(self._wrap_transfer(act, view))
+        return plans
+
+    # -- chunking (resumable cursors) -----------------------------------------
+    def _plan_items(self, acts: Sequence["Prefill"]) -> List[PrefillItem]:
+        items: List[PrefillItem] = []
+        if self.chunk_tokens is None:
+            for act in acts:
+                items.append(PrefillItem(act.rid, act.prompt_len, 0,
+                                         act.prompt_len, req=act.req))
+            return items
+        budget = self.chunk_tokens
+        for act in acts:
+            if budget <= 0:
+                break
+            if not self.chunk_execution:
+                # whole-prompt throttle: always admit the first prompt
+                # (so oversized prompts cannot starve), further ones
+                # only while the budget lasts
+                if items and act.prompt_len > budget:
+                    break
+                items.append(PrefillItem(act.rid, act.prompt_len, 0,
+                                         act.prompt_len, req=act.req))
+                budget -= act.prompt_len
+                continue
+            cur = self._cursors.get(act.rid, 0)
+            take = min(max(act.prompt_len - cur, 0), budget)
+            if take <= 0 and cur >= act.prompt_len:
+                continue
+            end = cur + take
+            items.append(PrefillItem(act.rid, act.prompt_len, cur, end,
+                                     req=act.req))
+            budget -= take
+            if end >= act.prompt_len:
+                self._cursors.pop(act.rid, None)
+            else:
+                self._cursors[act.rid] = end
+        return items
+
+    # -- decode stats from the view ledger ------------------------------------
+    def _decode_plan(self, idx: int, view) -> DecodePlan:
+        if not self.decode_details and self.trace is None:
+            return DecodePlan(idx)
+        inst = view.instances()[idx]
+        lines = inst.request_lines()
+        if not lines:
+            # membership is resolved at execution time (a request may
+            # stream in post-prefill, within the iteration); an empty
+            # plan prices to zero on the sim side
+            return DecodePlan(idx)
+        placements = view.placements()
+        mirrored = sum(1 for rid in lines
+                       if placements.get(rid, (None, None))[1] is not None)
+        lengths = tuple(l for _, l in sorted(lines.items()))
+        return DecodePlan(idx, lengths, mirrored)
+
+    # -- transfer wrapping ----------------------------------------------------
+    def _wrap_transfer(self, act: "Action", view) -> TransferPlan:
+        from repro.scheduling.actions import (EvictReplica, MirrorSync,
+                                              PromoteReplica, StreamState)
+        if isinstance(act, StreamState):
+            lines = view.instances()[act.src].request_lines().get(act.rid, 0)
+            return TransferPlan(act.src, act, lines=lines,
+                                overlap_layers=True)
+        if isinstance(act, MirrorSync):
+            lo, hi = act.from_line, act.to_line
+            if hi is None:
+                hi = view.instances()[act.primary].request_lines().get(
+                    act.rid, 0)
+            if lo is None:
+                lo = view.instances()[act.replica].replica_synced().get(
+                    act.rid, 0)
+            return TransferPlan(act.primary, act, lines=max(0, hi - lo))
+        if isinstance(act, (PromoteReplica, EvictReplica)):
+            inst = act.src if isinstance(act, PromoteReplica) else act.instance
+            return TransferPlan(inst, act, lines=0)
+        raise PlanError(f"cannot wrap action {act!r} into a transfer plan")
+
+    # -- trace ----------------------------------------------------------------
+    def _note(self, plan: StepPlan):
+        if self.trace is None:
+            return
+        if isinstance(plan, DecodePlan) and not plan.lengths:
+            return      # empty decode: a no-op placeholder, not work
+        self.trace.append(_normalize(plan))
+
+
+def _normalize(plan: StepPlan):
+    """Backend-independent plan descriptor for golden-trace equality."""
+    if isinstance(plan, MixedPlan):
+        if plan.decode is None or not plan.decode.lengths:
+            # nothing was resident to co-batch: this iteration IS a
+            # prefill (the empty decode part only lets the live executor
+            # run the same-iteration join)
+            return _normalize(plan.prefill)
+        return ("mixed", plan.instance, _normalize(plan.prefill)[2:],
+                _normalize(plan.decode)[2:])
+    if isinstance(plan, PrefillPlan):
+        return ("prefill", plan.instance,
+                tuple((it.rid, it.start, it.end) for it in plan.items),
+                plan.bucket_len)
+    if isinstance(plan, DecodePlan):
+        return ("decode", plan.instance, plan.lengths, plan.mirrored)
+    return ("transfer", plan.instance, type(plan.action).__name__, plan.lines)
