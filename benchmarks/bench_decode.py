@@ -1,0 +1,120 @@
+"""Decode-path microbenchmarks: what paged fused decode buys (ISSUE 5).
+
+Serves the same decode workload two ways on the reduced live engine
+(CPU), at 1 / 4 / 16 active slots out of a 16-slot instance:
+
+* **seed path** — dense per-step decode: every iteration runs attention
+  over the **entire** ``num_slots x kv_capacity`` window (free and
+  replica slots included) and pays a host round-trip per generated
+  token (``paged_decode=False``),
+* **paged fused** — the batch compacted to active primary slots, K/V
+  gathered through the store's block tables
+  (``kernels.decode_attention``), and ``steps`` iterations fused into
+  one jitted ``lax.scan`` with on-device sampling: one dispatch and one
+  host sync per plan.
+
+Emits walltime per generated token and the engine's host-sync counters,
+asserting the two paths produced bit-identical tokens.  Writes a
+``BENCH_decode.json`` snapshot next to the repo root; the acceptance
+bar is the paged-fused path beating the dense path in walltime at 4+
+active slots with host syncs at 1/plan instead of 1/token.
+"""
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import SMOKE, emit
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import InstanceEngine, Request
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_decode.json")
+
+NUM_SLOTS = 16
+
+
+def _reqs(cfg, n, new):
+    key = jax.random.PRNGKey(5)
+    lens = [8 + (5 * i) % 24 for i in range(n)]
+    return [Request(prompt_len=p, max_new_tokens=new,
+                    prompt_tokens=jax.random.randint(
+                        jax.random.fold_in(key, i), (1, p), 0,
+                        cfg.vocab_size))
+            for i, p in enumerate(lens)]
+
+
+def _serve(eng, cfg, active, new, *, steps):
+    """Prefill ``active`` requests and decode them to completion on
+    ``eng``; returns (decode walltime, decode tokens, host syncs,
+    output tokens).  Run twice on the SAME engine: jit caches are
+    per-engine, so the first pass pays the compiles and the second
+    measures steady state."""
+    reqs = _reqs(cfg, active, new)
+    for r in reqs:
+        eng.prefill_request(r)
+    syncs0 = eng.host_syncs
+    t0 = time.perf_counter()
+    while eng.slot_req:
+        if steps > 1:
+            eng.decode_multi(steps=steps)
+        else:
+            eng.decode()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output_tokens) for r in reqs) - len(reqs)  # decode only
+    return dt, toks, eng.host_syncs - syncs0, [r.output_tokens for r in reqs]
+
+
+def main():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kv_capacity = 64
+    new = 8 if SMOKE else 24
+    steps = 4 if SMOKE else 8
+    snap = {"num_slots": NUM_SLOTS, "kv_capacity": kv_capacity,
+            "decode_tokens": new, "fused_steps": steps, "slots": {}}
+
+    for active in (1, 4, 16):
+        eng_d = InstanceEngine(cfg, params, num_slots=NUM_SLOTS,
+                               kv_capacity=kv_capacity, paged_decode=False)
+        eng_p = InstanceEngine(cfg, params, num_slots=NUM_SLOTS,
+                               kv_capacity=kv_capacity, paged_decode=True)
+        # warm pass compiles, second pass measures steady state
+        _serve(eng_d, cfg, active, new, steps=1)
+        _serve(eng_p, cfg, active, new, steps=steps)
+        t_dense, toks, sync_dense, ref = _serve(
+            eng_d, cfg, active, new, steps=1)
+        t_fused, toks_f, sync_fused, out = _serve(
+            eng_p, cfg, active, new, steps=steps)
+        assert out == ref, f"paged-fused tokens diverge at {active} slots"
+        assert toks_f == toks
+        us_dense = t_dense / toks * 1e6
+        us_fused = t_fused / toks * 1e6
+        emit(f"decode_dense_per_step_b{active}", us_dense,
+             f"tok_s={toks / t_dense:.1f};host_syncs={sync_dense}")
+        emit(f"decode_paged_fused_b{active}", us_fused,
+             f"tok_s={toks / t_fused:.1f};host_syncs={sync_fused};"
+             f"speedup={t_dense / t_fused:.2f}x")
+        snap["slots"][str(active)] = {
+            "dense_us_per_token": round(us_dense, 1),
+            "fused_us_per_token": round(us_fused, 1),
+            "dense_tokens_per_s": round(toks / t_dense, 1),
+            "fused_tokens_per_s": round(toks / t_fused, 1),
+            "dense_host_syncs": sync_dense,
+            "fused_host_syncs": sync_fused,
+            "speedup": round(t_dense / t_fused, 2),
+            "tokens_bit_identical": True,
+        }
+        # host syncs: 1 per decode iteration dense vs 1 per fused plan
+        assert sync_dense == toks // active, (sync_dense, toks, active)
+        assert sync_fused < sync_dense
+
+    with open(SNAPSHOT, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,21 +1,21 @@
 """Paper Fig. 5: (left) co-batching prefill with decode inflates token
 latency >300%; (right) one instance at batch 40 vs two at batch 20."""
-from benchmarks.common import emit, perf, timed
+from benchmarks.common import decode_time, emit, perf, timed
 
 
 def main():
     pm = perf()
     lengths = [500] * 20
-    t_decode = pm.decode_step_time(lengths)
+    t_decode = decode_time(pm, lengths)
     # a 1024-token prompt lands mid-decode (vLLM-style co-batch)
-    t_mixed = pm.prefill_time([1024]) + pm.decode_step_time(lengths)
-    us = timed(pm.decode_step_time, lengths, n=50)
+    t_mixed = pm.prefill_time([1024]) + decode_time(pm, lengths)
+    us = timed(decode_time, pm, lengths, n=50)
     emit("fig5_interference_decode_only", us, f"tbt={t_decode * 1e3:.2f}ms")
     emit("fig5_interference_cobatched", us,
          f"tbt={t_mixed * 1e3:.2f}ms;inflation={t_mixed / t_decode:.1f}x")
     # imbalance: 40 on one instance vs 20+20
-    t40 = pm.decode_step_time([500] * 40)
-    t20 = pm.decode_step_time([500] * 20)
+    t40 = decode_time(pm, [500] * 40)
+    t20 = decode_time(pm, [500] * 20)
     emit("fig5_imbalance_b40_vs_2x20", us,
          f"b40={t40 * 1e3:.2f}ms;b20={t20 * 1e3:.2f}ms;"
          f"delta={(t40 - t20) * 1e3:.2f}ms")

@@ -1,6 +1,6 @@
 """Paper Figs. 3 & 4: prefill execution time/throughput vs prompt length and
 batch; decode step time / token throughput vs batch and KV length."""
-from benchmarks.common import emit, perf, timed
+from benchmarks.common import decode_time, emit, perf, timed
 
 
 def main():
@@ -16,8 +16,8 @@ def main():
     # Fig. 4 — decode: time & throughput vs (batch, kv len)
     for length in (250, 500, 1000):
         for batch in (1, 8, 32, 64):
-            t = pm.decode_step_time([length] * batch)
-            us = timed(pm.decode_step_time, [length] * batch, n=50)
+            t = decode_time(pm, [length] * batch)
+            us = timed(decode_time, pm, [length] * batch, n=50)
             thr = batch / t
             emit(f"fig4_decode_len{length}_b{batch}", us,
                  f"t={t * 1e3:.3f}ms;tok_s={thr:.0f}")

@@ -34,6 +34,13 @@ def perf(device=H100, n_dev=4) -> PerfModel:
     return PerfModel(CFG, InstanceSpec(device, n_dev))
 
 
+def decode_time(pm: PerfModel, lengths) -> float:
+    """Price one decode iteration through the single step-cost entry
+    point (``PerfModel.decode_step_time`` is deprecated)."""
+    from repro.stepplan import DecodePlan
+    return pm.plan_time(DecodePlan(0, lengths=tuple(lengths)))
+
+
 def run_sim(policy, workload, rate, duration, n_instances, device=H100,
             seed=0, horizon_mult=10.0, spec: Optional[WorkloadSpec] = None,
             slo: Optional[SLO] = DEFAULT_SLO):

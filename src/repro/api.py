@@ -41,6 +41,9 @@ class ServeSpec:
     #: KV lines per block in the paged store's ledger (None: largest
     #: divisor of kv_capacity <= 16)
     block_lines: Optional[int] = None
+    #: fused decode ceiling: idle open-loop stretches run up to N decode
+    #: iterations as one jitted scan (1 = per-step decode)
+    fuse_decode_steps: int = 1
     redundancy: bool = True            # forwarded to redundancy-aware policies
     reduced: bool = True               # CPU-sized variant of the architecture
     temperature: float = 0.0
@@ -171,7 +174,8 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
                        spec.kv_capacity, policy,
                        temperature=spec.temperature,
                        eos_token=spec.eos_token,
-                       block_lines=spec.block_lines)
+                       block_lines=spec.block_lines,
+                       fuse_decode_steps=spec.fuse_decode_steps)
 
 
 def serve(spec: ServeSpec,

@@ -244,6 +244,29 @@ def paged_decode_attention_pallas(
     return out[:, None] if squeeze else out
 
 
+def paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Backend dispatcher for the model's paged decode hot path: the
+    Mosaic kernel on TPU (interpret mode anywhere else, so the
+    ``pallas`` backend stays testable on CPU CI), the jnp gather oracle
+    otherwise.  Both paths read K/V exclusively through the block
+    tables — the dense per-slot window is never touched."""
+    if use_pallas:
+        return paged_decode_attention_pallas(
+            q, k_pool, v_pool, block_tables, lengths, scale=scale,
+            interpret=jax.default_backend() != "tpu")
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                      lengths, scale=scale)
+
+
 def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths,
                                *, scale: Optional[float] = None):
     """jnp oracle: gather each request's blocks into a contiguous cache,

@@ -137,6 +137,23 @@ class PagedStore:
             out.append(slot * self.line_blocks_per_slot + (k - off))
         return out
 
+    def decode_block_tables(self, rids: List[int], blocks: int):
+        """Padded ``(len(rids), blocks)`` int32 block tables for the
+        paged decode kernel.  Slot-affine placement makes each row the
+        identity run over its slot's pool region — the blocks the ring
+        window will hand the request as it grows — so one table covers
+        a whole fused multi-step scan without re-planning mid-scan
+        (``line_block_table`` returns exactly the allocated prefix of
+        this run).  Entries past a request's live lines are masked by
+        the kernel's ``lengths`` scalar, never read as valid KV."""
+        import numpy as np
+        blocks = min(blocks, self.line_blocks_per_slot)
+        out = np.empty((len(rids), blocks), np.int32)
+        for i, rid in enumerate(rids):
+            base = self.rid_slot[rid] * self.line_blocks_per_slot
+            out[i] = np.arange(base, base + blocks, dtype=np.int32)
+        return out
+
     def pool_view(self, arr: jnp.ndarray) -> jnp.ndarray:
         """Reshape one request-batched cache leaf ``(B, W, ...)`` into the
         block pool ``(B * W/block_lines, block_lines, ...)`` addressed by

@@ -57,6 +57,9 @@ def main():
     ap.add_argument("--block-lines", type=int, default=None,
                     help="KV lines per block in the paged store "
                          "(default: largest divisor of kv-capacity <= 16)")
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="fused decode ceiling: idle open-loop stretches "
+                         "run up to N decode iterations as one jitted scan")
     ap.add_argument("--workload", default="mixed", choices=list(TABLE2))
     ap.add_argument("--scale", type=float, default=0.05,
                     help="length scale for CPU-sized engines")
@@ -95,7 +98,7 @@ def main():
     spec = ServeSpec(
         arch=args.arch, policy=args.policy, n_instances=args.instances,
         num_slots=args.slots, kv_capacity=args.kv_capacity,
-        block_lines=args.block_lines,
+        block_lines=args.block_lines, fuse_decode_steps=args.fuse_steps,
         redundancy=not args.no_redundancy, reduced=not args.full_config,
         seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo)
     print(f"serving {args.arch} on {args.instances} instances "

@@ -163,6 +163,26 @@ def flash_attention(
     return out.astype(q.dtype)
 
 
+class PagedDecode:
+    """Paged-decode context threaded through the layer stack (ISSUE 5).
+
+    The decode batch is *compacted*: row ``i`` of the activations is
+    request slot ``slots[i]`` of the (full, ``num_slots``-row) cache
+    state, and its K/V is read back through ``tables[i]`` — physical
+    line-block ids into the pool view of the cache
+    (``PagedStore.pool_view`` layout: the dense ``(B, W, ...)`` leaf
+    reshaped to ``(B * W/block_lines, block_lines, ...)``).  Replica and
+    free slots are simply absent from ``slots``, so they cost nothing.
+    """
+
+    __slots__ = ("slots", "tables", "block_lines")
+
+    def __init__(self, slots: Array, tables: Array, block_lines: int):
+        self.slots = slots            # (Bc,) int32 — state rows of the batch
+        self.tables = tables          # (Bc, max_blocks) int32 pool block ids
+        self.block_lines = block_lines
+
+
 def decode_attention(
     q: Array,            # (B, 1, H, hd)
     k_cache: Array,      # (B, W, KVH, hd)
@@ -251,6 +271,7 @@ def gqa_forward(
     causal: bool = True,
     history: int = 0,               # static: cached KV rows [0, history)
                                     # precede this chunk (chunked prefill)
+    paged: Optional[PagedDecode] = None,  # compacted block-table decode
 ) -> Tuple[Array, Optional[dict]]:
     B, S, D = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -295,6 +316,25 @@ def gqa_forward(
             new_state = dict(state)
             new_state["k"] = ring_write(state["k"], k, t0, cap)
             new_state["v"] = ring_write(state["v"], v, t0, cap)
+    elif mode == "decode" and paged is not None:
+        # paged hot path (ISSUE 5): the batch is compacted to the active
+        # primary slots; the new K/V line scatters into the full cache at
+        # (slot, t mod W) and attention gathers back ONLY the request's
+        # live line blocks through its block table — decode reads
+        # O(resident lines), not O(num_slots * kv_capacity).
+        assert state is not None and t is not None and S == 1
+        from repro.kernels.decode_attention import paged_decode_attention
+        cap = state["k"].shape[1]
+        pos = t % cap
+        kc = state["k"].at[paged.slots, pos].set(k[:, 0])
+        vc = state["v"].at[paged.slots, pos].set(v[:, 0])
+        bl = paged.block_lines
+        pool_shape = (kc.shape[0] * (cap // bl), bl, kvh, hd)
+        lengths = jnp.minimum(t + 1, cap)
+        out = paged_decode_attention(
+            q, kc.reshape(pool_shape), vc.reshape(pool_shape),
+            paged.tables, lengths, scale=scale, use_pallas=_use_pallas())
+        new_state = dict(state, k=kc, v=vc)
     elif mode == "decode":
         assert state is not None and t is not None
         cap = state["k"].shape[1]
@@ -397,7 +437,11 @@ def mla_forward(
     update_cache: bool = False,
     causal: bool = True,
     history: int = 0,
+    paged: Optional[PagedDecode] = None,
 ):
+    assert paged is None, \
+        "paged decode gathers per-head K/V blocks; the MLA latent cache " \
+        "decodes through the absorbed dense path"
     m = cfg.mla
     B, S, _ = x.shape
     h = cfg.num_heads

@@ -127,7 +127,8 @@ def apply_layer(cfg: ModelConfig, spec: LayerSpec, params, x: Array,
             cfg, params["mixer"], h_in, positions=ctx["positions"],
             t=ctx.get("t"), window=ctx.get("window"),
             causal=ctx.get("causal", True),
-            history=ctx.get("history", 0), **kw)
+            history=ctx.get("history", 0),
+            paged=ctx.get("paged"), **kw)
     elif spec.block == "mamba":
         h, new_state = mamba_mod.mamba_forward(cfg, params["mixer"], h_in, **kw)
     elif spec.block == "mlstm":

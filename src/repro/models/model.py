@@ -311,11 +311,15 @@ def prefill_chunk(cfg: ModelConfig, params, tokens: Array, state,
 
 
 def decode_step(cfg: ModelConfig, params, tokens: Array, state, t: Array,
-                long_context: bool = False) -> Tuple[Array, Any]:
+                long_context: bool = False, paged=None
+                ) -> Tuple[Array, Any]:
     """One decode step: tokens (B,1) at clock t -> (logits (B,V), state).
 
     ``t`` is a scalar (homogeneous batch) or (B,) per-request clock
-    (continuous batching)."""
+    (continuous batching).  With ``paged`` (a
+    :class:`repro.models.attention.PagedDecode` context) the batch is
+    compacted and attention reads K/V through block tables — see
+    :func:`decode_step_paged`."""
     segs = _segs(cfg)
     window = _window(cfg, long_context)
     if jnp.ndim(t) == 0:
@@ -325,6 +329,8 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state, t: Array,
     x = _embed_tokens(cfg, params, tokens, pos)
     ctx = {"mode": "decode", "positions": pos, "update_cache": True,
            "t": t, "window": window}
+    if paged is not None:
+        ctx["paged"] = paged
     if cfg.is_encoder_decoder:
         ctx["enc_out"] = state["enc_out"]
     x, layers, _ = apply_stack(cfg, segs, params["segments"], x,
@@ -332,6 +338,68 @@ def decode_step(cfg: ModelConfig, params, tokens: Array, state, t: Array,
     state = dict(state, layers=layers)
     x = rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
     return _head(cfg, params, x)[:, 0], state
+
+
+def decode_step_paged(cfg: ModelConfig, params, tokens: Array, state,
+                      t: Array, slots: Array, tables: Array,
+                      block_lines: int, long_context: bool = False
+                      ) -> Tuple[Array, Any]:
+    """One *compacted, paged* decode step (ISSUE 5): ``decode_step``
+    with a :class:`~repro.models.attention.PagedDecode` context.
+
+    ``tokens`` (Bc, 1) / ``t`` (Bc,) cover only the active primary
+    slots; ``slots`` (Bc,) names each row's slot in the full cache
+    state, and ``tables`` (Bc, max_blocks) its physical line blocks in
+    the pool view (``PagedStore.decode_block_tables``).  Attention
+    writes the new KV line at (slot, t mod W) and reads back through the
+    block tables, so replica/free slots and dead cache rows cost
+    nothing.  Attention-only decoder stacks, GQA attention only (the
+    engine gates on ``supports_paged_decode``)."""
+    from repro.models.attention import PagedDecode
+    return decode_step(cfg, params, tokens, state, t,
+                       long_context=long_context,
+                       paged=PagedDecode(slots, tables, block_lines))
+
+
+def decode_multi(cfg: ModelConfig, params, tokens: Array, state, t: Array,
+                 slots: Array, tables: Array, budget: Array, keys: Array,
+                 *, block_lines: int, temperature: float = 0.0,
+                 eos_token: int = -1, long_context: bool = False
+                 ) -> Tuple[Array, Any, Array]:
+    """Fused multi-step paged decode: ``steps = keys.shape[0]``
+    iterations of :func:`decode_step_paged` as ONE ``lax.scan``, with
+    on-device sampling and EOS / budget short-circuiting — a single
+    dispatch and a single host transfer for the whole span.
+
+    Per row: ``budget`` is the remaining ``max_new_tokens``; a row goes
+    dead once it has emitted its budget or sampled ``eos_token`` (-1 =
+    no EOS).  Dead rows freeze: their clock stops, their (frozen) token
+    re-writes the same reserved cache line, and their trace repeats the
+    last token — the host reads only the first ``emitted[i]`` entries.
+    Sampling draws one pre-split key per step (``sampling.decode_keys``)
+    folded by slot, so the token stream is bit-identical to ``steps``
+    sequential single-step calls, even as rows die mid-scan.
+
+    Returns ``(tokens_all (steps, Bc), state, emitted (Bc,))``."""
+    from repro.serving.sampling import sample_slots
+
+    def body(carry, key):
+        toks, st, tt, alive, emitted = carry
+        logits, st = decode_step_paged(cfg, params, toks, st, tt, slots,
+                                       tables, block_lines,
+                                       long_context=long_context)
+        nxt = sample_slots(logits, key, slots, temperature)
+        nxt = jnp.where(alive, nxt, toks[:, 0])
+        emitted = emitted + alive.astype(jnp.int32)
+        tt = tt + alive.astype(tt.dtype)
+        alive = alive & (nxt != eos_token) & (emitted < budget)
+        return (nxt[:, None], st, tt, alive, emitted), nxt
+
+    Bc = tokens.shape[0]
+    init = (tokens, state, t, jnp.ones((Bc,), bool),
+            jnp.zeros((Bc,), jnp.int32))
+    (_, state, _, _, emitted), toks_all = jax.lax.scan(body, init, keys)
+    return toks_all, state, emitted
 
 
 def _window(cfg: ModelConfig, long_context: bool) -> Optional[int]:

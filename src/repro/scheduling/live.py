@@ -13,6 +13,7 @@ instance per iteration); latency metrics are reported in iterations.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -59,6 +60,9 @@ class LiveInstanceView:
 
     def free_blocks(self) -> int:
         return self._eng.store.free_blocks()
+
+    def block_lines(self) -> int:
+        return self._eng.store.block_lines
 
     def primary_bytes(self) -> float:
         store = self._eng.store
@@ -112,6 +116,10 @@ class LiveInstanceView:
         return {store.slot_rid[s]: store.used_bytes_of(store.slot_rid[s])
                 for s in self._eng.replica_of}
 
+    def decode_remaining(self) -> Dict[int, int]:
+        return {req.rid: req.max_new_tokens - req.generated
+                for req in self._eng.slot_req.values()}
+
     # -- mirror ledger --------------------------------------------------------
     def request_lines(self) -> Dict[int, int]:
         store = self._eng.store
@@ -152,7 +160,8 @@ class LiveCluster:
                  num_slots: int, kv_capacity: int,
                  policy: Union[SchedulerPolicy, str], *,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
-                 block_lines: Optional[int] = None):
+                 block_lines: Optional[int] = None,
+                 fuse_decode_steps: int = 1):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
             policy = get_policy(policy)
@@ -178,6 +187,17 @@ class LiveCluster:
         # the live executor runs plans, it never prices them: skip the
         # per-iteration decode ledger summaries unless a trace wants them
         self.planner.decode_details = False
+        #: fused decode ceiling: >1 lets idle open-loop stretches run up
+        #: to N decode iterations as one jitted scan (the planner still
+        #: keeps mirror-bound decode at one step per MirrorSync)
+        self.planner.max_fuse_steps = max(1, fuse_decode_steps)
+        #: iterations until the next source arrival (set by run();
+        #: fusing never runs past an admission point)
+        self._arrival_horizon: Optional[int] = None
+        #: run() is pumping a closed-loop source (refills fire on
+        #: completions, which bound fusing when EOS makes them
+        #: unforeseeable)
+        self._closed_loop = False
         if not self.engines[0].supports_chunked_prefill:
             # recurrent/enc-dec/modality stacks cannot resume a prompt
             # mid-chunk (state continuation is not implemented): the
@@ -223,9 +243,45 @@ class LiveCluster:
         self.queue.append((req, extra))
         self._submitted.append(req)
 
+    # -- decode fusing --------------------------------------------------------
+    def _fuse_budget(self) -> int:
+        """Iterations of decode the planner may fuse this step: only
+        idle open-loop stretches qualify — no queued/pending/mid-chunk
+        prefill work anywhere (a role could flip), capped by the arrival
+        horizon and by the shortest remaining token budget (so a fused
+        block ends exactly when its first request completes and
+        finish-time stamps stay iteration-exact).  Per-instance
+        mirror-bound exclusion lives in ``Planner._fuse_steps``."""
+        n = self.planner.max_fuse_steps
+        if n <= 1:
+            return 1
+        if self.queue or any(self._pending) or any(self._chunking):
+            return 1
+        # one shared iteration clock: if ANY request is mirrored, every
+        # instance stays at one step per iteration — otherwise a clean
+        # instance would fuse ahead while its mirror-bound pair ticks
+        # per-step, and the two would disagree about what "now" means
+        if any(pl.replica is not None for pl in self.placements.values()):
+            return 1
+        # closed-loop refills fire on completions; the budget cap makes
+        # those predictable EXCEPT when an eos_token can end a request
+        # mid-span — then a fused block would idle the freed slot until
+        # span end, delaying the replacement request vs per-step decode
+        if self._closed_loop and self.engines[0].eos_token is not None:
+            return 1
+        if self._arrival_horizon is not None:
+            n = min(n, self._arrival_horizon)
+        rem = [r.max_new_tokens - r.generated
+               for r in self._reqs.values() if r.phase is Phase.DECODE]
+        if rem:
+            n = min(n, min(rem))
+        return max(1, n)
+
     # -- one scheduling iteration ---------------------------------------------
     def step(self):
         self.clock.tick()
+        if self.planner.max_fuse_steps > 1:
+            self.planner.fuse_horizon = self._fuse_budget()
         view = LiveClusterView(self)
 
         # 1. routing: policy assigns queued requests to instances
@@ -311,17 +367,36 @@ class LiveCluster:
             self._apply_transfers(
                 self.policy.place_after_prefill(view, idx, req), view)
 
+        ran_steps = 1
         for plan in plans:
             dc = decode_part(plan)
             if dc is None or not self.engines[dc.instance].slot_req:
                 continue
             eng = self.engines[dc.instance]
-            live = [eng.slot_req[s] for s in eng.active_slots()]
-            if eng.decode():
-                self.stats["decode_steps"] += 1
+            live = {s: eng.slot_req[s] for s in eng.active_slots()}
+            out = eng.decode_multi(dc)
+            if out:
+                # account the span actually executed: EOS can end a
+                # fused block before dc.steps (the budget cap cannot
+                # foresee a sampled eos_token)
+                ran = max(len(toks) for toks in out.values())
+                self.stats["decode_steps"] += ran
+                ran_steps = max(ran_steps, ran)
                 decoded.add(dc.instance)
-            for req in live:
-                req.token_times.append(self.now)
+            for slot, toks in out.items():
+                req = live[slot]
+                for j in range(len(toks)):
+                    req.token_times.append(self.now + j)
+                if (dc.steps > 1 and req.phase is Phase.DONE
+                        and req.finish_time is None):
+                    # died mid-span (EOS): stamp the iteration it really
+                    # finished, not the end of the fused block
+                    req.finish_time = self.now + len(toks) - 1
+                    self.finished.append(req)
+        if ran_steps > 1:
+            # a fused block IS ran_steps scheduling iterations: advance
+            # the clock so latencies stay comparable to per-step decode
+            self.clock.tick(ran_steps - 1)
 
         # 5. release placements of finished requests
         self._release_finished()
@@ -517,6 +592,7 @@ class LiveCluster:
         """
         it = iter(source) if source is not None else None
         concurrency = source.concurrency if source is not None else None
+        self._closed_loop = bool(concurrency)
         exhausted = it is None
         next_req: Optional[Request] = None
         issued = 0
@@ -546,6 +622,10 @@ class LiveCluster:
                         self.submit(next_req, stamp_arrival=False)
                         issued += 1
                         next_req = None
+                    # fusing may not run past the next admission point
+                    self._arrival_horizon = (
+                        None if next_req is None
+                        else max(1, math.ceil(next_req.arrival - self.now)))
             if exhausted and not self.pending():
                 break
             self.step()

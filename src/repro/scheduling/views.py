@@ -55,6 +55,18 @@ class InstanceView(Protocol):
         them."""
         ...
 
+    def block_lines(self) -> int:
+        """KV lines per pool block on this instance — the gather/DMA
+        granularity of the paged decode path; the cost model rounds a
+        request's resident lines up to it."""
+        ...
+
+    def decode_remaining(self) -> Mapping[int, int]:
+        """Remaining token budget per resident decode request — the
+        planner's fused-span cap (a fused block never runs past the
+        iteration its first request completes)."""
+        ...
+
     def primary_bytes(self) -> float:
         """Ledger bytes of resident decode primaries."""
         ...

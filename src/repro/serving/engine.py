@@ -37,21 +37,23 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kvstore import PagedStore
-from repro.models import (decode_step, init_state, prefill, prefill_batched,
-                          prefill_chunk)
+from repro.models import (decode_multi, decode_step, init_state, prefill,
+                          prefill_batched, prefill_chunk)
 from repro.models.state import state_bytes
 from repro.serving.request import Phase, Request
-from repro.serving.sampling import sample
+from repro.serving.sampling import decode_keys, sample_slots
 
 if TYPE_CHECKING:  # runtime import is lazy: stepplan -> ... -> engine cycle
-    from repro.stepplan import PrefillItem, PrefillPlan  # noqa: F401
+    from repro.stepplan import (DecodePlan, PrefillItem,  # noqa: F401
+                                PrefillPlan)
 
 
 class InstanceEngine:
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  kv_capacity: int, instance_id: int = 0,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
-                 seed: int = 0, block_lines: Optional[int] = None):
+                 seed: int = 0, block_lines: Optional[int] = None,
+                 paged_decode: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -69,6 +71,13 @@ class InstanceEngine:
         # slots mid-chunked-prefill: occupied, but not yet decoding
         self.prefilling: Dict[int, Request] = {}
         self._key = jax.random.PRNGKey(seed + instance_id)
+        #: device->host materializations on the decode path (the sync the
+        #: fused scan amortizes: 1/token dense-per-step vs 1/plan fused)
+        self.host_syncs = 0
+        #: uploaded decode block tables, keyed by (resident rids, block
+        #: bucket) — slot-affine tables are growth-stable, so they only
+        #: rebuild when batch membership or the bucket changes
+        self._tables_cache: Optional[Tuple[tuple, jnp.ndarray]] = None
         self._jit_decode = jax.jit(
             functools.partial(decode_step, cfg), donate_argnums=(2,))
         self._jit_prefill = jax.jit(functools.partial(prefill, cfg))
@@ -84,12 +93,34 @@ class InstanceEngine:
         self._attn_only = (all(b == "attn" for b in cfg.block_pattern)
                            and not cfg.is_encoder_decoder
                            and cfg.frontend is None)
+        if paged_decode is None:
+            paged_decode = self.supports_paged_decode
+        #: decode through the block-table gather kernel with the batch
+        #: compacted to active primary slots (vs the dense full-window,
+        #: full-batch oracle path)
+        self.use_paged_decode = paged_decode and self.supports_paged_decode
+        # fused multi-step decode: compiles per (batch, table, steps)
+        # shape; eos/temperature are baked in as compile-time constants
+        self._jit_decode_multi = jax.jit(
+            functools.partial(
+                decode_multi, cfg, block_lines=self.store.block_lines,
+                temperature=temperature,
+                eos_token=-1 if eos_token is None else eos_token),
+            donate_argnums=(2,))
 
     @property
     def supports_chunked_prefill(self) -> bool:
         """Whether this engine can resume a prompt mid-chunk (recurrent
         state continuation across chunks is not implemented)."""
         return self._attn_only
+
+    @property
+    def supports_paged_decode(self) -> bool:
+        """Paged decode gathers per-head K/V line blocks: attention-only
+        decoder stacks with GQA attention (MLA decodes through the
+        absorbed latent path; recurrent blocks carry no line-indexed
+        cache to gather)."""
+        return self._attn_only and self.cfg.attention_kind == "gqa"
 
     @property
     def state(self):
@@ -233,7 +264,8 @@ class InstanceEngine:
         fresh = init_state(self.cfg, 1, window)
         logits, fresh = self._jit_prefill(self.params, batch, fresh)
         self._key, sub = jax.random.split(self._key)
-        tok = int(sample(logits, sub, self.temperature)[0])
+        tok = int(sample_slots(logits, sub, jnp.asarray([slot]),
+                               self.temperature)[0])
         self.store.merge_slot_rows(slot, fresh, 0, window)
         self._finish_prefill(req, slot, tok)
         return slot
@@ -257,7 +289,13 @@ class InstanceEngine:
         logits, fresh = self._jit_prefill_batched(
             self.params, jnp.asarray(toks), fresh, jnp.asarray(lens))
         self._key, sub = jax.random.split(self._key)
-        next_toks = np.asarray(sample(logits, sub, self.temperature))
+        # pad rows fold in an unused sentinel slot; their draws are
+        # discarded and never perturb a real slot's stream
+        row_slots = np.full((Bp,), self.num_slots, np.int32)
+        row_slots[:B] = slots[:B]
+        next_toks = np.asarray(sample_slots(logits, sub,
+                                            jnp.asarray(row_slots),
+                                            self.temperature))
         out: Dict[int, int] = {}
         for i, it in enumerate(items):
             slot = slots[i]
@@ -302,23 +340,39 @@ class InstanceEngine:
             return None
         del self.prefilling[slot]
         self._key, sub_key = jax.random.split(self._key)
-        tok = int(sample(logits, sub_key, self.temperature)[0])
+        tok = int(sample_slots(logits, sub_key, jnp.asarray([slot]),
+                               self.temperature)[0])
         self._finish_prefill(req, slot, tok, ledgered=True)
         return slot
 
     # -- decode ----------------------------------------------------------------
     def decode(self) -> Dict[int, int]:
-        """One decode iteration over all active slots; returns slot->token."""
+        """One decode iteration over the active slots; returns
+        slot->token.  Paged engines run the compacted single-step fused
+        path; others the dense full-batch oracle."""
         if not self.slot_req:
+            # a release mid-iteration can empty the batch: never pay a
+            # jitted full-batch dispatch to generate nothing
             return {}
+        if self.use_paged_decode:
+            return {slot: toks[0]
+                    for slot, toks in self.decode_multi(steps=1).items()}
         tokens = jnp.asarray(self.last_tokens)[:, None]
         t = jnp.asarray(self.lengths)
         logits, self.store.state = self._jit_decode(
             self.params, tokens, self.store.state, t)
         self._key, sub = jax.random.split(self._key)
-        next_tokens = np.asarray(sample(logits, sub, self.temperature))
+        # per-slot keys (fold_in by slot index == row index here) keep
+        # sampled tokens invariant to batch compaction on the paged path
+        next_tokens = np.asarray(sample_slots(
+            logits, sub, jnp.arange(self.num_slots), self.temperature))
+        self.host_syncs += 1
         out = {}
         for slot, req in list(self.slot_req.items()):
+            # rows of free/replica slots hold garbage logits: sampled
+            # tokens are read ONLY at active primary slots (this loop),
+            # and those must be real rows of the batch
+            assert 0 <= slot < next_tokens.shape[0]
             tok = int(next_tokens[slot])
             self.lengths[slot] += 1
             self.last_tokens[slot] = tok
@@ -328,6 +382,86 @@ class InstanceEngine:
             out[slot] = tok
             if req.done or (self.eos_token is not None
                             and tok == self.eos_token):
+                req.phase = Phase.DONE
+                self.release(slot)
+        return out
+
+    def decode_multi(self, plan: Optional["DecodePlan"] = None,
+                     steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Execute a (possibly fused) decode plan: ``steps`` decode
+        iterations as ONE jitted ``lax.scan`` over the compacted active
+        batch, with on-device sampling and EOS short-circuiting — one
+        dispatch and one host transfer per plan instead of per token.
+        Returns {slot: [tokens]} (a dead row stops contributing).
+
+        Engines without paged-decode support degrade to sequential
+        single-step calls (same tokens, per-step host syncs)."""
+        if steps is None:
+            steps = max(1, plan.steps) if plan is not None else 1
+        if not self.slot_req:
+            return {}
+        if not self.use_paged_decode:
+            out: Dict[int, List[int]] = {}
+            for _ in range(steps):
+                if not self.slot_req:
+                    break
+                for slot, tok in self.decode().items():
+                    out.setdefault(slot, []).append(tok)
+            return out
+        slots = self.active_slots()
+        reqs = [self.slot_req[s] for s in slots]
+        budget = np.asarray([r.max_new_tokens - r.generated for r in reqs],
+                            np.int32)
+        # never scan past the last live row's budget: trailing steps
+        # would only re-freeze dead rows
+        steps = max(1, min(steps, int(budget.max())))
+        t0 = self.lengths[slots].astype(np.int32)
+        # tables cover the lines the scan can reach; padded to a
+        # power-of-two block count so compiles stay O(log window)
+        from repro.stepplan import bucket_len
+        need = -(-min(int(t0.max()) + steps, self.kv_capacity)
+                 // self.store.block_lines)
+        blocks = bucket_len(need, floor=1,
+                            cap=self.store.line_blocks_per_slot)
+        # the slot-affine tables are growth-stable: reuse the uploaded
+        # array until batch membership — (rid, slot) pairs, since a
+        # request can leave and re-enter at a different slot — or the
+        # block bucket changes (rebuilding per token would tax the
+        # default steps=1 path)
+        cache_key = (tuple(slots), tuple(r.rid for r in reqs), blocks)
+        if self._tables_cache is None or self._tables_cache[0] != cache_key:
+            self._tables_cache = (cache_key, jnp.asarray(
+                self.store.decode_block_tables([r.rid for r in reqs],
+                                               blocks)))
+        tables = self._tables_cache[1]
+        key_chain, keys = decode_keys(self._key, steps)
+        toks_all, self.store.state, emitted = self._jit_decode_multi(
+            self.params, jnp.asarray(self.last_tokens[slots])[:, None],
+            self.store.state, jnp.asarray(t0), jnp.asarray(slots),
+            tables, jnp.asarray(budget), keys)
+        toks_np = np.asarray(toks_all)
+        emitted = np.asarray(emitted)
+        self.host_syncs += 1
+        # consume key splits only for iterations that actually ran (EOS
+        # can empty the batch early; sequential decode would have
+        # stopped splitting there) — fused and per-step paths agree on
+        # the key state the NEXT request samples under
+        self._key = key_chain[int(emitted.max())]
+        out = {}
+        for i, slot in enumerate(slots):
+            req = reqs[i]
+            n = int(emitted[i])
+            if n == 0:
+                continue
+            toks = [int(x) for x in toks_np[:n, i]]
+            out[slot] = toks
+            req.generated += n
+            req.output_tokens.extend(toks)
+            self.store.append_line(req.rid, n)
+            self.lengths[slot] += n
+            self.last_tokens[slot] = toks[-1]
+            if req.done or (self.eos_token is not None
+                            and toks[-1] == self.eos_token):
                 req.phase = Phase.DONE
                 self.release(slot)
         return out

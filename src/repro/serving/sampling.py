@@ -1,5 +1,18 @@
-"""Token sampling."""
+"""Token sampling.
+
+Decode determinism contract (ISSUE 5): every sampling site — single
+prefill, padded batched prefill, chunk resume, dense decode and the
+fused paged decode scan — draws exactly ONE subkey per iteration from
+the engine key (:func:`decode_keys`) and then derives a per-request key
+by folding in the request's *slot* (:func:`sample_slots`).  The sampled
+token for a slot therefore depends only on (iteration, slot), never on
+how the batch happens to be composed — compacted vs full-batch decode,
+fused vs sequential steps, and live-vs-sim golden traces all stay
+token-identical when batch membership changes.
+"""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +20,9 @@ import jax.numpy as jnp
 
 def sample(logits: jax.Array, key, temperature: float = 0.0,
            top_k: int = 0) -> jax.Array:
-    """logits (B, V) -> (B,) int32."""
+    """logits (B, V) -> (B,) int32.  One key for the whole batch — the
+    drawn tokens depend on batch composition; prefer
+    :func:`sample_slots` anywhere batches can be compacted."""
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
@@ -16,3 +31,45 @@ def sample(logits: jax.Array, key, temperature: float = 0.0,
         cutoff = vals[:, -1:]
         logits = jnp.where(logits < cutoff, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(logits: jax.Array, key, slots: jax.Array,
+                 temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """Per-slot sampling: row i draws with ``fold_in(key, slots[i])``.
+
+    logits (B, V), slots (B,) int32 -> (B,) int32.  Because each row's
+    randomness is keyed by its slot (not its row index), the token drawn
+    for a slot is invariant to batch compaction — a decode batch holding
+    only the active primary slots samples exactly what the full-batch
+    path would have sampled at those slots."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(slots)
+    return jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg))(logits, keys
+                                                     ).astype(jnp.int32)
+
+
+def decode_keys(key, steps: int) -> Tuple[list, jax.Array]:
+    """Split ``key`` exactly as ``steps`` sequential decode iterations
+    would (one split per iteration); returns ``(chain, subs)`` where
+    ``chain[i]`` is the engine-key state after ``i`` splits
+    (``chain[-1]`` = fully advanced) and ``subs`` is stacked
+    ``(steps, ...)`` for a ``lax.scan``.  The chain lets a fused span
+    that ends early (EOS emptied the batch after ``ran < steps``
+    iterations) leave the engine key at ``chain[ran]`` — the state the
+    per-step path would have reached, since sequential decode stops
+    splitting once the batch is empty.  That keeps fused and sequential
+    token streams bit-identical across request boundaries too."""
+    chain = [key]
+    subs = []
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        chain.append(key)
+        subs.append(sub)
+    return chain, jnp.stack(subs)

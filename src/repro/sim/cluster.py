@@ -37,8 +37,9 @@ class SimInstance:
     # peak memory tracking (paper Fig. 9)
     peak_state_bytes: float = 0.0
     busy_time: float = 0.0
-    # current running iteration: (StepPlan, decode-batch snapshot)
-    _running: Optional[Tuple[StepPlan, tuple]] = None
+    # current running iteration: (StepPlan, decode-batch snapshot,
+    # start time)
+    _running: Optional[Tuple[StepPlan, tuple, float]] = None
     #: block-table accounting ledger (repro.kvstore) — the same
     #: arithmetic the live PagedStore runs; (re)built in __post_init__
     store: Optional[SimStore] = None
@@ -117,6 +118,9 @@ class Simulator:
         policy.bind(self)
         self.clock = ModeledSecondsClock()
         self._heap: List[tuple] = []
+        #: pending arrival times (min-heap), maintained incrementally so
+        #: fused-decode horizon checks never rescan the event heap
+        self._arrivals: List[float] = []
         self._seq = itertools.count()
         self._kicking: set = set()   # re-entrancy guard for kick()
         self.finished: List[SimRequest] = []
@@ -139,6 +143,15 @@ class Simulator:
     # -- event helpers ---------------------------------------------------------
     def push(self, time: float, kind: str, data=None):
         heapq.heappush(self._heap, (time, next(self._seq), kind, data))
+        if kind == "arrival":
+            heapq.heappush(self._arrivals, time)
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest arrival still strictly in the future (None if no
+        arrival is pending) — the fused-decode span bound."""
+        while self._arrivals and self._arrivals[0] < self.now:
+            heapq.heappop(self._arrivals)
+        return self._arrivals[0] if self._arrivals else None
 
     def kick(self, inst: SimInstance):
         """Start the next iteration on an idle instance."""
@@ -158,7 +171,7 @@ class Simulator:
         dur = self.perf.plan_time(plan)
         inst.busy = True
         inst.busy_time += dur
-        inst._running = (plan, tuple(inst.decode_batch))
+        inst._running = (plan, tuple(inst.decode_batch), self.now)
         self.push(self.now + dur, "inst_done", inst.iid)
 
     # -- event handlers -----------------------------------------------------------
@@ -172,7 +185,7 @@ class Simulator:
 
     def _handle_done(self, iid: int):
         inst = self.instances[iid]
-        plan, batch_snapshot = inst._running
+        plan, batch_snapshot, started = inst._running
         inst.busy = False
         inst._running = None
         pf = prefill_part(plan)
@@ -189,18 +202,28 @@ class Simulator:
                 r.generated += 1
             self.policy.on_prefill_done(inst, reqs)
         if dc is not None:
+            # a fused plan IS dc.steps decode iterations: each request
+            # in the snapshot advances once per step until done.  Token
+            # times spread evenly across the span's modeled duration, so
+            # per-token TBT/SLO metrics stay comparable to the live
+            # executor (which stamps one iteration apart) instead of
+            # bunching at plan completion.
+            steps = max(1, dc.steps)
+            per_step = (self.now - started) / steps
             finished_now: List[SimRequest] = []
-            for rid in batch_snapshot:
-                r = inst.decode_batch.get(rid)
-                if r is None:
-                    continue
-                r.generated += 1
-                r.token_times.append(self.now)
-                if r.done:
-                    r.finish_time = self.now
-                    self.finished.append(r)
-                    finished_now.append(r)
-                    del inst.decode_batch[rid]
+            for j in range(steps):
+                t_j = started + per_step * (j + 1)
+                for rid in batch_snapshot:
+                    r = inst.decode_batch.get(rid)
+                    if r is None:
+                        continue
+                    r.generated += 1
+                    r.token_times.append(t_j)
+                    if r.done:
+                        r.finish_time = t_j
+                        self.finished.append(r)
+                        finished_now.append(r)
+                        del inst.decode_batch[rid]
             self.policy.on_decode_done(inst, finished_now)
         inst.note_peak()
         self.kick(inst)
@@ -267,6 +290,10 @@ class Simulator:
                 break
             self.now = t
             if kind == "arrival":
+                # keep the arrival mirror-heap drained even when no
+                # fusing policy ever asks for next_arrival()
+                if self._arrivals and self._arrivals[0] <= t:
+                    heapq.heappop(self._arrivals)
                 self._handle_arrival(data)
             elif kind == "inst_done":
                 self._handle_done(data)

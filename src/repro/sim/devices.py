@@ -36,6 +36,12 @@ class InstanceSpec:
 
     device: DeviceSpec
     n_devices: int = 4
+    #: fixed host-side cost per decode *dispatch* (kernel launch + the
+    #: host round-trip that reads the sampled tokens back), in seconds.
+    #: A fused multi-step DecodePlan pays it once per plan, not per
+    #: token — the amortization the live engine's ``decode_multi`` scan
+    #: realizes.  0 keeps the seed cost model (pure roofline).
+    dispatch_s: float = 0.0
 
     @property
     def tflops(self) -> float:

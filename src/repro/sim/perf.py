@@ -100,9 +100,33 @@ class PerfModel:
 
     # -- decode (HBM-bound, §3.3) --------------------------------------------
     def decode_step_time(self, lengths: Sequence[int]) -> float:
+        """Deprecated: price decode through
+        ``plan_time(DecodePlan(...))`` — the one step-cost entry point —
+        so block granularity, mirror bounds and dispatch amortization
+        are never bypassed."""
+        import warnings
+        warnings.warn(
+            "PerfModel.decode_step_time is deprecated; price decode "
+            "iterations through plan_time(DecodePlan(0, lengths=...))",
+            DeprecationWarning, stacklevel=2)
+        return self.plan_time(DecodePlan(0, lengths=tuple(lengths)))
+
+    def _decode_iter_time(self, lengths: Sequence[int],
+                          block_lines: int = 0, grown: int = 0) -> float:
+        """One decode iteration over the resident ``lengths``: HBM-bound
+        over active weights + each request's KV read.  With
+        ``block_lines`` the read is block-granular — what the paged
+        gather actually DMAs — so lines round up to whole blocks;
+        ``grown`` models lines already appended by earlier steps of a
+        fused plan."""
         if not lengths:
             return 0.0
-        kv = sum(state_bytes_at(self.cfg, l, DTYPE_BYTES) for l in lengths)
+        kv = 0.0
+        for l in lengths:
+            l += grown
+            if block_lines:
+                l = -(-l // block_lines) * block_lines
+            kv += state_bytes_at(self.cfg, l, DTYPE_BYTES)
         t_mem = (self.active_weight_bytes + kv) / self.inst.hbm_bw
         flops = 2.0 * self.cfg.param_count(active_only=True) * len(lengths)
         t_compute = flops / (self.inst.tflops * 1e12)
@@ -120,10 +144,15 @@ class PerfModel:
           chunk spans, including each resumed chunk's attention over
           its cached history (bucket padding is a live-compile concern,
           not modeled cost).
-        * DecodePlan  — HBM-bound batch step over the resident line
-          counts; when requests are mirrored, the per-step replica sync
-          (one KV line each over the pair link) may bound the step
-          instead (paper Fig. 10).
+        * DecodePlan  — HBM-bound batch iterations over the resident
+          line counts, read at the pool's block granularity (the paged
+          gather DMAs whole blocks, not exact lines); ``steps`` fused
+          iterations price each step at its grown lengths and pay the
+          fixed per-dispatch overhead (``InstanceSpec.dispatch_s``)
+          ONCE — the amortization the live engine's fused scan
+          realizes.  When requests are mirrored, the per-step replica
+          sync (one KV line each over the pair link) may bound each
+          step instead (paper Fig. 10).
         * MixedPlan   — prefill + decode co-batched: the sum (the vLLM
           TBT spike of Fig. 5/16).
         * TransferPlan — StreamState moves the whole state over the
@@ -140,14 +169,20 @@ class PerfModel:
             return self.chunked_prefill_time(
                 [(it.start, it.end) for it in plan.items])
         if isinstance(plan, DecodePlan):
-            t = self.decode_step_time(list(plan.lengths))
-            if plan.mirrored:
-                # mirror traffic charged from the shared ledger costs:
-                # one new KV line per mirrored request per step (§4.1.2)
-                t_link = (plan.mirrored * self.line_costs.mirror_bytes(1)
-                          / self.inst.link_bw)
-                t = max(t, t_link)
-            return t
+            if not plan.lengths:
+                return 0.0
+            # mirror traffic charged from the shared ledger costs:
+            # one new KV line per mirrored request per step (§4.1.2)
+            t_link = (plan.mirrored * self.line_costs.mirror_bytes(1)
+                      / self.inst.link_bw)
+            total = self.inst.dispatch_s       # once per plan, not per step
+            for j in range(max(1, plan.steps)):
+                t = self._decode_iter_time(plan.lengths, plan.block_lines,
+                                           grown=j)
+                if plan.mirrored:
+                    t = max(t, t_link)
+                total += t
+            return total
         if isinstance(plan, TransferPlan):
             if isinstance(plan.action, StreamState):
                 return self.kv_transfer_time(

@@ -77,6 +77,9 @@ class SimInstanceView:
     def free_blocks(self) -> int:
         return self._i.free_blocks()
 
+    def block_lines(self) -> int:
+        return self._i.block_lines
+
     def primary_bytes(self) -> float:
         costs = self._i.store.costs
         return sum(costs.bytes_at(r.total_len)
@@ -124,6 +127,10 @@ class SimInstanceView:
         return {rid: self._i.perf.kv_bytes(r.total_len)
                 for rid, r in self._i.replicas.items()}
 
+    def decode_remaining(self) -> Dict[int, int]:
+        return {rid: r.max_new_tokens - r.generated
+                for rid, r in self._i.decode_batch.items()}
+
     # -- mirror ledger --------------------------------------------------------
     def request_lines(self) -> Dict[int, int]:
         return {rid: r.total_len for rid, r in self._i.decode_batch.items()}
@@ -164,12 +171,20 @@ class KernelPolicy(Policy):
     #: without redundancy
     placement: Dict[int, Tuple[int, Optional[int]]]
 
-    def __init__(self, kernel: SchedulerPolicy):
+    def __init__(self, kernel: SchedulerPolicy, fuse_decode_steps: int = 1):
         self.kernel = kernel
         self.placement = {}
         #: same configuration rule as the live executor: the kernel
         #: declares mixing/chunking, the planner shapes iterations
         self.planner = Planner.for_policy(kernel)
+        #: fused decode ceiling (mirrors LiveCluster(fuse_decode_steps=)):
+        #: idle decode instances compile up-to-N-step DecodePlans, priced
+        #: with one amortized dispatch by plan_time; the planner's
+        #: mirror/backlog/remaining-budget gates apply per instance,
+        #: spans are capped at the next pending arrival (_fuse_horizon),
+        #: and event-driven instances keep independent clocks so no
+        #: cluster-wide uniformity cap is needed
+        self.planner.max_fuse_steps = max(1, fuse_decode_steps)
 
     @property
     def name(self):  # type: ignore[override]
@@ -183,8 +198,27 @@ class KernelPolicy(Policy):
         return None if idx is None else self.sim.instances[idx]
 
     # -- plan helpers ---------------------------------------------------------
+    def _fuse_horizon(self, inst: SimInstance) -> Optional[int]:
+        """Decode iterations until the next pending arrival, in units of
+        this instance's current single-step time — the sim analogue of
+        the live executor's arrival-horizon cap, so a fused span never
+        runs (much) past an admission point on either backend.  None
+        when no arrival is scheduled."""
+        nxt = self.sim.next_arrival()
+        if nxt is None:
+            return None
+        lengths = tuple(sorted(r.total_len
+                               for r in inst.decode_batch.values()))
+        t1 = self.sim.perf.plan_time(DecodePlan(
+            inst.iid, lengths=lengths, block_lines=inst.block_lines))
+        if t1 <= 0:
+            return None
+        return max(1, int((nxt - self.sim.now) / t1))
+
     def _compile(self, inst: SimInstance,
                  actions: List[Action]) -> Optional[StepPlan]:
+        if self.planner.max_fuse_steps > 1:
+            self.planner.fuse_horizon = self._fuse_horizon(inst)
         plans = self.planner.compile(actions, self.view())
         if not plans:
             return None
@@ -222,8 +256,10 @@ class KernelPolicy(Policy):
 
 class VLLMPolicy(KernelPolicy):
 
-    def __init__(self, kernel: Optional[SchedulerPolicy] = None):
-        super().__init__(kernel or VLLMScheduler())
+    def __init__(self, kernel: Optional[SchedulerPolicy] = None,
+                 fuse_decode_steps: int = 1):
+        super().__init__(kernel or VLLMScheduler(),
+                         fuse_decode_steps=fuse_decode_steps)
 
     def next_plan(self, inst):
         actions: List[Action] = []
@@ -261,8 +297,9 @@ class SarathiPolicy(VLLMPolicy):
     old ``_chunk_work`` side-channel and per-adapter cost override are
     gone, and the identical planner drives the live engines."""
 
-    def __init__(self, chunk_tokens: int = 512):
-        super().__init__(SarathiScheduler(chunk_tokens))
+    def __init__(self, chunk_tokens: int = 512, fuse_decode_steps: int = 1):
+        super().__init__(SarathiScheduler(chunk_tokens),
+                         fuse_decode_steps=fuse_decode_steps)
         self.chunk_tokens = chunk_tokens
 
 
@@ -273,8 +310,9 @@ class SarathiPolicy(VLLMPolicy):
 
 class SplitwisePolicy(KernelPolicy):
 
-    def __init__(self, n_prefill: int):
-        super().__init__(SplitwiseScheduler(n_prefill))
+    def __init__(self, n_prefill: int, fuse_decode_steps: int = 1):
+        super().__init__(SplitwiseScheduler(n_prefill),
+                         fuse_decode_steps=fuse_decode_steps)
         self.n_prefill = n_prefill
 
     def bind(self, sim):
@@ -317,8 +355,10 @@ class SplitwisePolicy(KernelPolicy):
 class AcceLLMPolicy(KernelPolicy):
 
     def __init__(self, redundancy: bool = True,
-                 kernel: Optional[AcceLLMScheduler] = None):
-        super().__init__(kernel or AcceLLMScheduler(redundancy=redundancy))
+                 kernel: Optional[AcceLLMScheduler] = None,
+                 fuse_decode_steps: int = 1):
+        super().__init__(kernel or AcceLLMScheduler(redundancy=redundancy),
+                         fuse_decode_steps=fuse_decode_steps)
 
     @property
     def redundancy(self) -> bool:

@@ -58,6 +58,15 @@ class Planner:
         #: per instance per iteration, wasted when nothing reads them.
         #: Tracing re-enables them regardless (golden-trace equality).
         self.decode_details = True
+        #: fused decode ceiling: how many decode iterations one
+        #: DecodePlan may execute as a single dispatch.  1 disables
+        #: fusing (seed semantics); the executor raises it for idle
+        #: open-loop stretches.
+        self.max_fuse_steps = 1
+        #: per-iteration fuse bound set by the executor before compile
+        #: (iterations until the next arrival / scheduling point; None =
+        #: unbounded).  Fusing never crosses a scheduling decision.
+        self.fuse_horizon: Optional[int] = None
         #: rid -> prompt tokens already prefilled (resumable chunk
         #: cursors; entries exist only while a prompt is mid-chunk).
         self._cursors: Dict[int, int] = {}
@@ -177,20 +186,56 @@ class Planner:
 
     # -- decode stats from the view ledger ------------------------------------
     def _decode_plan(self, idx: int, view) -> DecodePlan:
-        if not self.decode_details and self.trace is None:
+        # the per-iteration ledger summaries are skipped whenever they
+        # can't be consumed: executor doesn't price plans, no trace, and
+        # fusing is off — statically (max_fuse_steps) or for THIS
+        # iteration (the executor's fuse_horizon says a scheduling
+        # point is due next tick anyway)
+        horizon = (self.fuse_horizon if self.fuse_horizon is not None
+                   else self.max_fuse_steps)
+        fusing = self.max_fuse_steps > 1 and horizon > 1
+        if not self.decode_details and self.trace is None and not fusing:
             return DecodePlan(idx)
         inst = view.instances()[idx]
+        bl = inst.block_lines() if hasattr(inst, "block_lines") else 0
         lines = inst.request_lines()
         if not lines:
             # membership is resolved at execution time (a request may
             # stream in post-prefill, within the iteration); an empty
             # plan prices to zero on the sim side
-            return DecodePlan(idx)
+            return DecodePlan(idx, block_lines=bl)
         placements = view.placements()
         mirrored = sum(1 for rid in lines
                        if placements.get(rid, (None, None))[1] is not None)
         lengths = tuple(l for _, l in sorted(lines.items()))
-        return DecodePlan(idx, lengths, mirrored)
+        return DecodePlan(idx, lengths, mirrored,
+                          steps=self._fuse_steps(inst, mirrored),
+                          block_lines=bl)
+
+    def _fuse_steps(self, inst, mirrored: int) -> int:
+        """How many decode iterations this instance may run as one fused
+        dispatch.  Mirror-bound decode (any resident request with a
+        replica) keeps ``steps == 1``: its per-step ``MirrorSync`` is a
+        scheduling point the fused scan must not run past.  So does a
+        non-empty prefill backlog — the instance's role can flip next
+        iteration.  Otherwise the executor's ``fuse_horizon`` (time to
+        the next arrival) and the residents' shortest remaining token
+        budget cap the span, so a fused block never runs past the
+        iteration its first request completes."""
+        n = min(self.max_fuse_steps,
+                self.fuse_horizon if self.fuse_horizon is not None
+                else self.max_fuse_steps)
+        if n <= 1 or mirrored or inst.prefill_backlog():
+            return 1
+        if hasattr(inst, "decode_remaining"):
+            rem = inst.decode_remaining()
+            if rem:
+                n = min(n, max(1, min(rem.values())))
+        # floor to a power of two: `steps` is a static shape of the live
+        # backend's jitted scan, so arbitrary horizon values would each
+        # compile a fresh kernel (flooring never overruns a scheduling
+        # point, it only ends the span early)
+        return 1 << (n.bit_length() - 1)
 
     # -- transfer wrapping ----------------------------------------------------
     def _wrap_transfer(self, act: "Action", view) -> TransferPlan:
@@ -238,5 +283,7 @@ def _normalize(plan: StepPlan):
                 tuple((it.rid, it.start, it.end) for it in plan.items),
                 plan.bucket_len)
     if isinstance(plan, DecodePlan):
-        return ("decode", plan.instance, plan.lengths, plan.mirrored)
+        # block_lines is a pricing detail, not iteration shape: excluded
+        return ("decode", plan.instance, plan.lengths, plan.mirrored,
+                plan.steps)
     return ("transfer", plan.instance, type(plan.action).__name__, plan.lines)

@@ -111,6 +111,16 @@ class DecodePlan:
     #: how many of those primaries have a replica to mirror into; their
     #: per-step sync traffic may bound the step (Fig. 10).
     mirrored: int = 0
+    #: fused decode iterations this plan executes as one dispatch
+    #: (``Planner`` decides; mirror-bound decode keeps ``steps == 1`` so
+    #: every generated line syncs to its replica the same iteration).
+    #: The live engine runs them as a single jitted ``lax.scan``; the
+    #: cost model amortizes the per-dispatch overhead across them.
+    steps: int = 1
+    #: KV-pool block granularity (lines/block) of the executing
+    #: instance: the paged gather reads whole blocks, so the cost model
+    #: rounds each request's lines up to it (0 = price exact lines).
+    block_lines: int = 0
 
 
 @dataclass(frozen=True)

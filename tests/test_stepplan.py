@@ -155,8 +155,12 @@ def test_plan_time_prices_all_plan_kinds():
     pf = PrefillPlan(0, (PrefillItem(1, 100, 0, 100),
                          PrefillItem(2, 50, 0, 50)), 128)
     dc = DecodePlan(0, lengths=(200, 300), mirrored=0)
+    t_iter = perf._decode_iter_time((200, 300))
     assert perf.plan_time(pf) == perf.prefill_time([100, 50])
-    assert perf.plan_time(dc) == perf.decode_step_time([200, 300])
+    assert perf.plan_time(dc) == t_iter
+    # the deprecated bare method routes through the same entry point
+    with pytest.deprecated_call():
+        assert perf.decode_step_time([200, 300]) == perf.plan_time(dc)
     assert perf.plan_time(MixedPlan(0, pf, dc)) == pytest.approx(
         perf.plan_time(pf) + perf.plan_time(dc))
     # a resumed chunk pays for its history attention (what the live
@@ -171,8 +175,7 @@ def test_plan_time_prices_all_plan_kinds():
     # mirrored decodes may be bound by the pair link (Fig. 10)
     mirrored = DecodePlan(0, lengths=(200, 300), mirrored=2)
     t_link = 2 * perf.line_costs.mirror_bytes(1) / perf.inst.link_bw
-    assert perf.plan_time(mirrored) == max(perf.decode_step_time([200, 300]),
-                                           t_link)
+    assert perf.plan_time(mirrored) == max(t_iter, t_link)
     # transfers: whole-state stream vs delta mirror vs free role flip
     stream = TransferPlan(0, StreamState(1, 0, 1), lines=400)
     assert perf.plan_time(stream) == perf.kv_transfer_time(400)
