@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_kvstore",         # paged KV store: mirror delta cost
     "benchmarks.bench_stepplan",        # bucketed batch prefill vs seed path
     "benchmarks.bench_decode",          # paged fused decode vs dense per-step
+    "benchmarks.bench_fleet",           # fault injection: failover vs re-prefill
 ]
 
 

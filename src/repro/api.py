@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.fleet import FleetController, FleetSchedule
 from repro.models import init_params
 from repro.scheduling.live import LiveCluster
 from repro.scheduling.registry import get_policy, policy_accepts
@@ -55,6 +56,10 @@ class ServeSpec:
     traffic: Optional[WorkloadSpec] = None
     #: latency targets in iterations; enables attainment/goodput reporting
     slo: Optional[SLO] = None
+    #: fleet fault-injection schedule (repro.fleet): kills / joins /
+    #: drains applied between scheduler iterations on the iteration
+    #: clock; the same schedule drives the simulator in modeled seconds
+    fleet: Optional[FleetSchedule] = None
     # legacy request sampling (used when `traffic` is not given)
     workload: str = "mixed"
     n_requests: int = 16
@@ -80,6 +85,12 @@ class ServeReport:
     @property
     def stats(self) -> Dict[str, int]:
         return self.cluster.stats
+
+    @property
+    def fleet_stats(self) -> Optional[Dict[str, int]]:
+        """Failover/scale counters from the run's FleetController (None
+        when no fleet event fired)."""
+        return self.cluster.fleet.stats if self.cluster.fleet else None
 
     @property
     def all_finished(self) -> bool:
@@ -155,6 +166,9 @@ class ServeReport:
                 f"decode={util['decode']:.1%} idle={util['idle']:.1%}; "
                 f"queue depth mean={qd['mean']:.1f} peak={qd['peak']:.0f}")
         lines.append(f"stats: {self.stats}")
+        if self.fleet_stats is not None:
+            fs = {k: v for k, v in self.fleet_stats.items() if v}
+            lines.append(f"fleet: {fs or 'no events fired'}")
         return "\n".join(lines)
 
 
@@ -170,12 +184,15 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
     if policy_accepts(spec.policy, "redundancy"):
         kwargs.setdefault("redundancy", spec.redundancy)
     policy = get_policy(spec.policy, **kwargs)
+    fleet = (FleetController(spec.fleet, seed=spec.seed)
+             if spec.fleet is not None else None)
     return LiveCluster(cfg, params, spec.n_instances, spec.num_slots,
                        spec.kv_capacity, policy,
                        temperature=spec.temperature,
                        eos_token=spec.eos_token,
                        block_lines=spec.block_lines,
-                       fuse_decode_steps=spec.fuse_decode_steps)
+                       fuse_decode_steps=spec.fuse_decode_steps,
+                       fleet=fleet)
 
 
 def serve(spec: ServeSpec,

@@ -1,0 +1,21 @@
+"""Fleet layer: one deterministic event schedule, two executors.
+
+``FleetSchedule`` (fixed / Poisson-MTBF / JSONL replay) yields the
+identical kill/join/drain stream for the live cluster's iteration clock
+and the simulator's modeled seconds; ``FleetController`` paces it,
+plans failover from the shared scheduling views, and records the
+decision trace both backends must agree on.
+"""
+from repro.fleet.controller import (FailoverPlan, FleetController, Promotion,
+                                    reset_for_reprefill, rollback_tokens)
+from repro.fleet.events import (Drain, FixedFleet, FleetEvent, FleetSchedule,
+                                JoinInstance, KillInstance, PoissonFailures,
+                                load_fleet_trace, save_fleet_trace)
+
+__all__ = [
+    "KillInstance", "JoinInstance", "Drain", "FleetEvent",
+    "FleetSchedule", "FixedFleet", "PoissonFailures",
+    "save_fleet_trace", "load_fleet_trace",
+    "FleetController", "FailoverPlan", "Promotion",
+    "reset_for_reprefill", "rollback_tokens",
+]

@@ -1,0 +1,139 @@
+"""Fleet events: *when* instances die, join, or drain.
+
+The fleet analogue of :mod:`repro.workloads.arrivals` — a
+:class:`FleetSchedule` yields monotonically non-decreasing fleet events
+in abstract **time units** (one scheduling iteration on the live
+executor, one modeled second in the simulator), drawn from a seeded
+``numpy`` Generator so the identical event stream hits both backends.
+Schedules come in the same three shapes as traffic: fixed instants
+(:class:`FixedFleet`), a seeded stochastic process
+(:class:`PoissonFailures` — exponential inter-failure gaps, the MTBF
+model), and JSONL trace replay (:func:`load_fleet_trace`).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class KillInstance:
+    """Instance ``instance`` fails abruptly at ``t``: every byte of its
+    serving state (primaries, replicas, prefill backlog) is lost."""
+    t: float
+    instance: int
+    kind = "kill"
+
+
+@dataclass(frozen=True)
+class JoinInstance:
+    """A fresh instance comes up at ``t``.  ``instance`` names a dead
+    index to revive (replacement hardware at the same rank); ``None``
+    appends a brand-new index — warm autoscaling."""
+    t: float
+    instance: Optional[int] = None
+    kind = "join"
+
+
+@dataclass(frozen=True)
+class Drain:
+    """Instance ``instance`` stops taking new work at ``t`` and leaves
+    the fleet once its resident requests complete — graceful scale-down
+    (the k8s cordon+drain shape)."""
+    t: float
+    instance: int
+    kind = "drain"
+
+
+FleetEvent = Union[KillInstance, JoinInstance, Drain]
+
+
+class FleetSchedule:
+    """Base class; subclasses implement :meth:`events`."""
+
+    def events(self, rng: np.random.Generator) -> Iterator[FleetEvent]:
+        raise NotImplementedError
+
+    def stream(self, seed: int = 0) -> List[FleetEvent]:
+        """The full event list for one run, time-sorted (stable, so
+        same-instant events keep their emission order)."""
+        evs = list(self.events(np.random.default_rng(seed)))
+        return sorted(evs, key=lambda e: e.t)
+
+    def describe(self) -> str:
+        return f"fleet schedule: {self!r}"
+
+
+@dataclass(frozen=True)
+class FixedFleet(FleetSchedule):
+    """A literal event list — the fleet analogue of ``TraceReplay``, and
+    the deterministic form every other schedule reduces to via
+    :meth:`FleetSchedule.stream`."""
+    fleet_events: Tuple[FleetEvent, ...] = ()
+
+    def events(self, rng):
+        yield from self.fleet_events
+
+
+@dataclass(frozen=True)
+class PoissonFailures(FleetSchedule):
+    """Seeded memoryless failures: exponential gaps with mean ``mtbf``
+    over ``duration`` time units, each killing a uniformly chosen
+    instance.  With ``recovery`` set, replacement hardware revives the
+    same index ``recovery`` units after each kill (the kill/join churn
+    of a preemptible fleet)."""
+    mtbf: float
+    duration: float
+    n_instances: int
+    recovery: Optional[float] = None
+
+    def events(self, rng):
+        t = 0.0
+        while True:
+            t += rng.exponential(self.mtbf)
+            if t >= self.duration:
+                return
+            victim = int(rng.integers(self.n_instances))
+            yield KillInstance(t, victim)
+            if self.recovery is not None:
+                yield JoinInstance(t + self.recovery, victim)
+
+
+# ---------------------------------------------------------------------------
+# JSONL trace round-trip (mirrors repro.workloads.spec.save_trace)
+# ---------------------------------------------------------------------------
+
+
+def save_fleet_trace(path, events: Sequence[FleetEvent]) -> int:
+    """Write a fleet event stream as JSONL ({t, event, instance} per
+    line); returns the number of records written."""
+    n = 0
+    with open(path, "w") as fh:
+        for ev in events:
+            fh.write(json.dumps({"t": ev.t, "event": ev.kind,
+                                 "instance": ev.instance}) + "\n")
+            n += 1
+    return n
+
+
+def load_fleet_trace(path) -> FixedFleet:
+    """Read a JSONL fleet trace back into a replayable schedule."""
+    events: List[FleetEvent] = []
+    kinds = {"kill": KillInstance, "join": JoinInstance, "drain": Drain}
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            cls = kinds[rec["event"]]
+            instance = rec.get("instance")
+            if instance is not None:
+                instance = int(instance)
+            elif cls is not JoinInstance:
+                raise ValueError(f"{rec['event']} event needs an instance")
+            events.append(cls(float(rec["t"]), instance))
+    return FixedFleet(tuple(events))

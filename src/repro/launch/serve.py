@@ -23,6 +23,7 @@ import argparse
 
 from repro.api import ServeSpec, serve
 from repro.configs import list_archs
+from repro.fleet import PoissonFailures, load_fleet_trace
 from repro.scheduling.registry import policy_names
 from repro.workloads import (SLO, TABLE2, Batch, Bursty, ClosedLoop,
                              DiurnalRamp, Poisson, TableLengths, WorkloadSpec)
@@ -42,6 +43,20 @@ def build_arrival(args):
     if args.arrival == "closed":
         return ClosedLoop(k=args.concurrency, n_requests=args.requests)
     raise ValueError(args.arrival)
+
+
+def build_fleet(args):
+    """Fleet fault-injection schedule from the CLI flags (repro.fleet):
+    a recorded JSONL trace replays exactly; an MTBF draws seeded
+    Poisson failures across the serve window."""
+    if args.fleet_trace:
+        return load_fleet_trace(args.fleet_trace)
+    if args.fleet_mtbf:
+        return PoissonFailures(mtbf=args.fleet_mtbf,
+                               duration=args.duration,
+                               n_instances=args.instances,
+                               recovery=args.fleet_recovery)
+    return None
 
 
 def main():
@@ -78,6 +93,15 @@ def main():
                     help="TTFT target in iterations")
     ap.add_argument("--slo-tbt", type=float, default=None,
                     help="per-token TBT target in iterations")
+    ap.add_argument("--fleet-mtbf", type=float, default=None,
+                    help="mean iterations between instance failures "
+                         "(seeded Poisson fault injection)")
+    ap.add_argument("--fleet-recovery", type=float, default=None,
+                    help="iterations until a killed instance rejoins "
+                         "(default: never)")
+    ap.add_argument("--fleet-trace", default=None,
+                    help="JSONL fleet trace to replay "
+                         "(repro.fleet.save_fleet_trace)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=2000)
     ap.add_argument("--no-redundancy", action="store_true")
@@ -100,7 +124,8 @@ def main():
         num_slots=args.slots, kv_capacity=args.kv_capacity,
         block_lines=args.block_lines, fuse_decode_steps=args.fuse_steps,
         redundancy=not args.no_redundancy, reduced=not args.full_config,
-        seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo)
+        seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo,
+        fleet=build_fleet(args))
     print(f"serving {args.arch} on {args.instances} instances "
           f"with policy={args.policy}, redundancy={spec.redundancy}")
     print(traffic.describe())

@@ -26,7 +26,8 @@ from repro.scheduling.actions import (Action, EvictReplica, MirrorSync,
                                       PromoteReplica, StreamState)
 from repro.scheduling.base import (ROLE_DECODE, ROLE_IDLE, ROLE_PREFILL,
                                    SchedulerPolicy)
-from repro.scheduling.views import ClusterView, InstanceView, RequestView
+from repro.scheduling.views import (ClusterView, InstanceView, RequestView,
+                                    usable)
 
 PairView = Tuple[InstanceView, InstanceView]
 
@@ -60,7 +61,7 @@ class AcceLLMScheduler(SchedulerPolicy):
         if not eligible:
             return None
         pair = max(eligible,
-                   key=lambda p: p[0].mem_free() + p[1].mem_free())
+                   key=lambda p: sum(v.mem_free() for v in p if usable(v)))
         side = self.choose_prefill_side(pair, req)
         if side is None:
             return None
@@ -69,24 +70,31 @@ class AcceLLMScheduler(SchedulerPolicy):
         return target
 
     def _pair_can_accept(self, pair: PairView, req: RequestView) -> bool:
-        if any(v.can_admit(req) for v in pair):
+        sides = [v for v in pair if usable(v)]
+        if not sides:
+            return False
+        if any(v.can_admit(req) for v in sides):
             return True
         # memory pressure: a replica can be evicted to make room (§4.2.5)
-        if any(v.replica_weights() for v in pair):
+        if any(v.replica_weights() for v in sides):
             return True
-        return any(v.can_queue() for v in pair)
+        return any(v.can_queue() for v in sides)
 
     # -- dynamic roles (§4.2.3) ---------------------------------------------
     def choose_prefill_side(self, pair: PairView, req: RequestView
                             ) -> Optional[int]:
-        open_sides = [s for s in (0, 1) if pair[s].can_admit(req)]
+        live_sides = [s for s in (0, 1) if usable(pair[s])]
+        if not live_sides:
+            return None
+        open_sides = [s for s in live_sides if pair[s].can_admit(req)]
         if not open_sides:
-            victims = self._eviction_victims(pair, need=1)
+            victims = self._eviction_victims(
+                [pair[s] for s in live_sides], need=1)
             if victims:
-                open_sides = [s for s in (0, 1)
+                open_sides = [s for s in live_sides
                               if pair[s].index == victims[0].instance]
-            elif any(v.can_queue() for v in pair):
-                open_sides = [s for s in (0, 1) if pair[s].can_queue()]
+            elif any(pair[s].can_queue() for s in live_sides):
+                open_sides = [s for s in live_sides if pair[s].can_queue()]
             else:
                 return None
         return min(open_sides, key=lambda s: (pair[s].decode_load(), s))
@@ -123,14 +131,18 @@ class AcceLLMScheduler(SchedulerPolicy):
                                       else 0)
 
         dst, rep = 1 - side, side
-        if load(dst) > load(rep) + self.swap_margin:
+        if not usable(pair[dst]):
+            # partner down/draining: the request stays where it
+            # prefilled and serves unmirrored until the fleet recovers
+            dst, rep = side, 1 - side
+        elif load(dst) > load(rep) + self.swap_margin:
             dst, rep = side, 1 - side
         if dst != side and not pair[dst].can_hold_primary(req):
             dst, rep = side, 1 - side
 
         replica: Optional[int] = None
-        if self.redundancy and pair[rep].can_hold_replica(
-                req, resident=(rep == side)):
+        if self.redundancy and usable(pair[rep]) \
+                and pair[rep].can_hold_replica(req, resident=(rep == side)):
             replica = pair[rep].index
 
         actions: List[Action] = []
@@ -174,10 +186,45 @@ class AcceLLMScheduler(SchedulerPolicy):
                                       from_line=synced, to_line=lines))
         return actions
 
+    # -- fleet: warm scale-up (repro.fleet) ---------------------------------
+    def warm_on_join(self, cluster: ClusterView, instance: int
+                     ) -> List[Action]:
+        """A joined instance warms up by hosting replicas of its
+        partner's unmirrored primaries (StreamState as_replica) before
+        any new arrival routes to it — redundancy is re-established
+        first, then the rebalancer can shift load via promotion."""
+        if not self.redundancy:
+            return []
+        pair = next((p for p in cluster.pairs()
+                     if instance in (p[0].index, p[1].index)), None)
+        if pair is None:
+            return []            # unpaired appendee: nothing to warm from
+        joined = pair[0] if pair[0].index == instance else pair[1]
+        partner = pair[1] if pair[0].index == instance else pair[0]
+        if not usable(partner):
+            return []
+        placements = cluster.placements()
+        budget = joined.free_slots()
+        actions: List[Action] = []
+        for rid in sorted(partner.decode_weights()):
+            if budget <= 0:
+                break
+            if placements.get(rid, (None, None))[1] is not None:
+                continue         # already mirrored somewhere
+            actions.append(StreamState(rid, src=partner.index,
+                                       dst=instance, as_replica=True))
+            self._note("warm", rid, partner.index, instance)
+            budget -= 1
+        return actions
+
     # -- balancing by count + state bytes (§4.1.3) --------------------------
     def rebalance(self, cluster: ClusterView, pair_index: int
                   ) -> List[Action]:
         pair = cluster.pairs()[pair_index]
+        if not (usable(pair[0]) and usable(pair[1])):
+            # promotion shifts work between the sides; with one side
+            # dead or cordoned there is nothing to balance against
+            return []
         placements = cluster.placements()
         items = []
         for side, view in enumerate(pair):
@@ -189,12 +236,24 @@ class AcceLLMScheduler(SchedulerPolicy):
         if not should_rebalance(items):
             return []
         _, _, moves = partition(items)
-        actions = [PromoteReplica(rid, src=pair[src].index,
-                                  dst=pair[dst].index)
-                   for rid, src, dst in sorted(moves)]
-        if actions:
-            self._note("rebalance",
-                       tuple((a.rid, a.src, a.dst) for a in actions))
+        actions: List[Action] = []
+        promoted = []
+        for rid, src, dst in sorted(moves):
+            # a replica may only take the primary role at the primary's
+            # line count: if its synced mark lags (a sync was skipped or
+            # raced a fleet event), emit the catch-up delta FIRST —
+            # serving from a stale copy would corrupt the request
+            synced = pair[dst].replica_synced().get(rid, 0)
+            lines = pair[src].request_lines().get(rid, synced)
+            if synced < lines:
+                actions.append(MirrorSync(rid, pair[src].index,
+                                          pair[dst].index,
+                                          from_line=synced, to_line=lines))
+            actions.append(PromoteReplica(rid, src=pair[src].index,
+                                          dst=pair[dst].index))
+            promoted.append((rid, pair[src].index, pair[dst].index))
+        if promoted:
+            self._note("rebalance", tuple(promoted))
         return actions
 
     # -- graceful degradation (§4.2.5) --------------------------------------

@@ -89,10 +89,19 @@ class SchedulerPolicy:
         """Per-iteration replica maintenance (MirrorSync actions)."""
         return []
 
+    # -- fleet events -------------------------------------------------------
+    def warm_on_join(self, cluster: ClusterView, instance: int
+                     ) -> List[Action]:
+        """Warm a freshly joined ``instance`` before new arrivals route
+        to it (StreamState actions — e.g. re-establishing replicas of
+        resident requests).  Baselines have nothing to warm with."""
+        return []
+
     # -- balancing / memory pressure ---------------------------------------
     def rebalance(self, cluster: ClusterView, pair_index: int
                   ) -> List[Action]:
-        """Re-split a pair's decode work (PromoteReplica actions)."""
+        """Re-split a pair's decode work (PromoteReplica actions,
+        preceded by catch-up MirrorSyncs for any lagging replica)."""
         return []
 
     def evict(self, cluster: ClusterView,

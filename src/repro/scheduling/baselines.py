@@ -18,16 +18,17 @@ from typing import List, Optional
 from repro.scheduling.actions import Action, StreamState
 from repro.scheduling.base import (ROLE_DECODE, ROLE_IDLE, ROLE_PREFILL,
                                    SchedulerPolicy)
-from repro.scheduling.views import ClusterView, RequestView
+from repro.scheduling.views import ClusterView, RequestView, usable
 
 
 class VLLMScheduler(SchedulerPolicy):
     name = "vllm"
 
     def route(self, cluster: ClusterView, req: RequestView) -> Optional[int]:
-        insts = cluster.instances()
+        # dead/draining instances never take new work (repro.fleet)
+        insts = [v for v in cluster.instances() if usable(v)]
         ok = [v for v in insts if v.can_admit(req)]
-        pool = ok or [v for v in insts if v.can_queue()] or list(insts)
+        pool = ok or [v for v in insts if v.can_queue()] or insts
         if not pool:
             return None
         # least loaded instance with memory headroom
@@ -57,7 +58,10 @@ class SplitwiseScheduler(SchedulerPolicy):
         self.n_prefill = n_prefill
 
     def route(self, cluster: ClusterView, req: RequestView) -> Optional[int]:
-        prefillers = cluster.instances()[: self.n_prefill]
+        prefillers = [v for v in cluster.instances()[: self.n_prefill]
+                      if usable(v)]
+        if not prefillers:
+            return None          # every prefill instance is down/cordoned
         return min(prefillers,
                    key=lambda v: (v.prefill_backlog_tokens(), v.index)).index
 
@@ -68,8 +72,11 @@ class SplitwiseScheduler(SchedulerPolicy):
         return ROLE_DECODE if inst.decode_load() else ROLE_IDLE
 
     def choose_decode_target(self, cluster: ClusterView, req: RequestView
-                             ) -> int:
-        decoders = cluster.instances()[self.n_prefill:]
+                             ) -> Optional[int]:
+        decoders = [v for v in cluster.instances()[self.n_prefill:]
+                    if usable(v)]
+        if not decoders:
+            return None          # decode tier down: stay on the prefiller
         # least-loaded decoder, memory headroom as the tiebreaker
         return min(decoders,
                    key=lambda v: (v.decode_load() - v.mem_free() * 1e-18,
@@ -78,7 +85,7 @@ class SplitwiseScheduler(SchedulerPolicy):
     def place_after_prefill(self, cluster: ClusterView, instance: int,
                             req: RequestView) -> List[Action]:
         dst = self.choose_decode_target(cluster, req)
-        if dst == instance:
+        if dst is None or dst == instance:
             return []
         # whole-state KV transfer on the request's critical path
         return [StreamState(req.rid, src=instance, dst=dst)]

@@ -15,19 +15,23 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple, Union
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
 
 from repro.configs.base import ModelConfig
 from repro.scheduling.actions import (Action, Decode, EvictReplica,
                                       MirrorSync, Prefill, PromoteReplica,
                                       StreamState)
-from repro.scheduling.base import ROLE_MIXED, ROLE_PREFILL, SchedulerPolicy
+from repro.scheduling.base import (ROLE_IDLE, ROLE_MIXED, ROLE_PREFILL,
+                                   SchedulerPolicy)
 from repro.serving.engine import InstanceEngine
 from repro.serving.request import Phase, Request
 from repro.stepplan import (Planner, PrefillPlan, decode_part,
                             prefill_part)
 from repro.workloads import IterationClock, TimelinePoint
 from repro.workloads.spec import RequestSource
+
+if TYPE_CHECKING:                 # runtime import stays lazy: repro.fleet
+    from repro.fleet import FleetController  # imports this module's package
 
 
 @dataclass
@@ -48,6 +52,13 @@ class LiveInstanceView:
     @property
     def index(self) -> int:
         return self._index
+
+    # -- fleet state ---------------------------------------------------------
+    def alive(self) -> bool:
+        return self._c.alive[self._index]
+
+    def draining(self) -> bool:
+        return self._c.draining[self._index]
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> int:
@@ -161,7 +172,8 @@ class LiveCluster:
                  policy: Union[SchedulerPolicy, str], *,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
                  block_lines: Optional[int] = None,
-                 fuse_decode_steps: int = 1):
+                 fuse_decode_steps: int = 1,
+                 fleet: Optional["FleetController"] = None):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
             policy = get_policy(policy)
@@ -170,12 +182,23 @@ class LiveCluster:
                 f"{policy.name} organizes instances in pairs"
         self.cfg = cfg
         self.policy = policy
+        self._params = params
+        # join events build replacement engines with the original shape
+        self._engine_kwargs = dict(
+            num_slots=num_slots, kv_capacity=kv_capacity,
+            temperature=temperature, eos_token=eos_token,
+            block_lines=block_lines)
         self.engines = [
             InstanceEngine(cfg, params, num_slots, kv_capacity,
                            instance_id=i, temperature=temperature,
                            eos_token=eos_token, block_lines=block_lines)
             for i in range(n_instances)
         ]
+        #: fleet state per instance index (repro.fleet); dead engines
+        #: stay in the list so indices remain stable
+        self.alive: List[bool] = [True] * n_instances
+        self.draining: List[bool] = [False] * n_instances
+        self.fleet = fleet
         self.queue: List[Tuple[Request, Optional[dict]]] = []
         self._pending: List[List[Tuple[Request, Optional[dict]]]] = [
             [] for _ in range(n_instances)]
@@ -271,6 +294,11 @@ class LiveCluster:
             return 1
         if self._arrival_horizon is not None:
             n = min(n, self._arrival_horizon)
+        if self.fleet is not None:
+            # a fused span must not scan past a scheduled fleet event
+            nxt = self.fleet.next_time()
+            if nxt is not None:
+                n = min(n, max(1, math.ceil(nxt - self.now)))
         rem = [r.max_new_tokens - r.generated
                for r in self._reqs.values() if r.phase is Phase.DECODE]
         if rem:
@@ -280,6 +308,13 @@ class LiveCluster:
     # -- one scheduling iteration ---------------------------------------------
     def step(self):
         self.clock.tick()
+        # fleet events apply between scheduler iterations: the view the
+        # policy reads below already reflects kills/joins/drains
+        if self.fleet is not None:
+            for ev in self.fleet.due(self.now):
+                self._apply_fleet_event(ev)
+        if any(self.draining):
+            self._settle_drains()
         if self.planner.max_fuse_steps > 1:
             self.planner.fuse_horizon = self._fuse_budget()
         view = LiveClusterView(self)
@@ -299,11 +334,14 @@ class LiveCluster:
         # 2. roles -> declarative step actions; the planner compiles them
         # into per-instance plans (bucketing, chunk cursors, and the
         # §4.2.3 no-mixing invariant all live there, not here)
-        roles = {i: self.policy.choose_roles(view, i)
+        roles = {i: (self.policy.choose_roles(view, i) if self.alive[i]
+                     else ROLE_IDLE)
                  for i in range(len(self.engines))}
         actions: List[Action] = []
         taken_now: Dict[int, List[Tuple[Request, Optional[dict]]]] = {}
         for idx, eng in enumerate(self.engines):
+            if not self.alive[idx]:
+                continue
             pf_actions: List[Action] = []
             if roles[idx] in (ROLE_PREFILL, ROLE_MIXED):
                 for req in self._chunking[idx]:
@@ -434,6 +472,160 @@ class LiveCluster:
             n_decode=len(decoded - prefilled),
             n_idle=n - len(busy)))
 
+    # -- fleet mechanics (repro.fleet) ---------------------------------------
+    def _fleet_ctrl(self) -> "FleetController":
+        if self.fleet is None:
+            # direct-driven fleet ops (tests, interactive kills) still
+            # need the shared decision planner + trace/stats home
+            from repro.fleet import FleetController
+            self.fleet = FleetController()
+        return self.fleet
+
+    def _apply_fleet_event(self, ev):
+        from repro.fleet import Drain, JoinInstance, KillInstance
+        if isinstance(ev, KillInstance):
+            self.fleet_kill(ev.instance)
+        elif isinstance(ev, JoinInstance):
+            self.fleet_join(ev.instance)
+        elif isinstance(ev, Drain):
+            self.fleet_drain(ev.instance)
+        else:
+            raise ValueError(f"unknown fleet event {ev!r}")
+
+    def fleet_kill(self, instance: int):
+        """Abrupt instance failure: every resident byte is gone.  The
+        shared controller plans what survives — primaries with a warm
+        replica flip roles via the existing promotion machinery (rolled
+        back to the replica's synced line); everything else re-queues
+        for a full re-prefill."""
+        if instance >= len(self.engines) or not self.alive[instance]:
+            return
+        from repro.fleet import reset_for_reprefill, rollback_tokens
+        ctrl = self._fleet_ctrl()
+        ctrl.note("kill", instance)
+        ctrl.stats["kills"] += 1
+        plan = ctrl.plan_failover(LiveClusterView(self), instance)
+        dead = self.engines[instance]
+        # 1. promotions: the warm replica takes over at its synced line;
+        # the unsynced tail of decode tokens re-generates there
+        for pr in plan.promotions:
+            pl = self.placements[pr.rid]
+            r_idx, r_slot = pl.replica
+            req = self._reqs[pr.rid]
+            if pr.lost_lines:
+                rollback_tokens(req, pr.lost_lines)
+                ctrl.stats["lost_lines"] += pr.lost_lines
+            self.engines[r_idx].promote_replica(r_slot, req)
+            pl.primary = (r_idx, r_slot)
+            pl.replica = None
+            ctrl.note("promote", pr.rid, pr.src, pr.dst, pr.lost_lines)
+            ctrl.stats["promotions"] += 1
+            self.stats["replica_promotions"] += 1
+        # 2. truly lost state: back to the queue head, full re-prefill
+        # (original arrival stamp kept — the TTFT damage is the metric)
+        requeued: List[Tuple[Request, Optional[dict]]] = []
+        for rid in plan.requeues:
+            req = self._reqs.pop(rid)
+            ctrl.note("requeue", rid)
+            ctrl.stats["requeues"] += 1
+            ctrl.stats["lost_decode_tokens"] += req.generated
+            ctrl.stats["reprefill_tokens"] += reset_for_reprefill(req)
+            self.planner.forget(rid)
+            del self.placements[rid]
+            requeued.append((req, self._extras.pop(rid, req.extra)))
+        # 3. replicas this instance hosted for surviving primaries
+        for rid in plan.dropped_replicas:
+            self.placements[rid].replica = None
+            ctrl.note("drop_replica", rid)
+        # 4. routed-but-unprefilled backlog re-routes (no tokens re-run)
+        for req, extra in self._pending[instance]:
+            ctrl.note("requeue", req.rid)
+            ctrl.stats["requeue_backlog"] += 1
+            requeued.append((req, extra))
+        self._pending[instance] = []
+        # 5. prompts mid-chunk lose their partial prefill work
+        for req in self._chunking[instance]:
+            ctrl.note("requeue", req.rid)
+            ctrl.stats["requeues"] += 1
+            ctrl.stats["reprefill_tokens"] += self.planner.cursor(req.rid)
+            self.planner.forget(req.rid)
+            reset_for_reprefill(req)
+            requeued.append((req, self._extras.pop(req.rid, req.extra)))
+        self._chunking[instance] = []
+        self.queue[:0] = requeued
+        # 6. teardown: free every slot; the dead engine object stays in
+        # the list so instance indices remain stable
+        for slot in (list(dead.slot_req) + list(dead.replica_of)
+                     + list(dead.prefilling)):
+            dead.release(slot)
+        self.alive[instance] = False
+        self.draining[instance] = False
+
+    def fleet_join(self, instance: Optional[int] = None) -> int:
+        """Register a fresh instance (revive a dead index, or append a
+        new one with ``None``), then let the kernel warm it with
+        replicas of resident requests BEFORE any new arrival routes
+        there."""
+        ctrl = self._fleet_ctrl()
+        if instance is not None and instance < len(self.engines):
+            if self.alive[instance]:
+                return instance           # join of a live index: no-op
+            idx = instance
+            # replacement hardware at the same rank: the torn-down
+            # engine (every slot freed at kill) is the fresh instance
+            self.alive[idx] = True
+            self.draining[idx] = False
+        else:
+            idx = len(self.engines)
+            self.engines.append(
+                InstanceEngine(self.cfg, self._params, instance_id=idx,
+                               **self._engine_kwargs))
+            self._pending.append([])
+            self._chunking.append([])
+            self.alive.append(True)
+            self.draining.append(False)
+        ctrl.note("join", idx)
+        ctrl.stats["joins"] += 1
+        view = LiveClusterView(self)
+        acts = self.policy.warm_on_join(view, idx)
+        if acts:
+            self._apply_transfers(acts, view)
+            ctrl.stats["warm_streams"] += len(acts)
+        return idx
+
+    def fleet_drain(self, instance: int):
+        """Cordon: no new work routes here (``draining`` in the views);
+        the instance leaves the fleet once its residents complete."""
+        if instance >= len(self.engines) or not self.alive[instance] \
+                or self.draining[instance]:
+            return
+        ctrl = self._fleet_ctrl()
+        self.draining[instance] = True
+        ctrl.note("drain", instance)
+        ctrl.stats["drains"] += 1
+        self._settle_drains()
+
+    def _settle_drains(self):
+        for idx, draining in enumerate(self.draining):
+            if not (draining and self.alive[idx]):
+                continue
+            eng = self.engines[idx]
+            if eng.slot_req or eng.prefilling or self._pending[idx] \
+                    or self._chunking[idx]:
+                continue
+            # only replicas remain: the primaries live elsewhere, so the
+            # copies are surrendered and the instance leaves the fleet
+            for slot in list(eng.replica_of):
+                rid = eng.store.slot_rid[slot]
+                eng.release(slot)
+                pl = self.placements.get(rid)
+                if pl is not None and pl.replica is not None \
+                        and pl.replica[0] == idx:
+                    pl.replica = None
+            self.alive[idx] = False
+            self.draining[idx] = False
+            self._fleet_ctrl().note("drained", idx)
+
     # -- plan execution -------------------------------------------------------
     def _execute_prefill(self, pf: PrefillPlan,
                          newly: List[Tuple[int, Request]], prefilled: set):
@@ -490,6 +682,8 @@ class LiveCluster:
         pl = self.placements.get(act.rid)
         if pl is None or pl.primary[0] != act.src:
             return
+        if not self.alive[act.dst] or self.draining[act.dst]:
+            return                       # destination left the fleet
         src_idx, src_slot = pl.primary
         src = self.engines[src_idx]
         dst = self.engines[act.dst]
@@ -541,6 +735,13 @@ class LiveCluster:
         src = self.engines[p_idx]
         dst = self.engines[r_idx]
         req = src.slot_req[p_slot]
+        # executor backstop for the kernel's catch-up contract: a stale
+        # replica must absorb the unsynced tail before taking the
+        # primary role — promotion itself moves no bytes
+        if dst.store.synced_line(req.rid) < src.store.lines(req.rid):
+            moved = dst.sync_replica_from(src, p_slot, r_slot)
+            self.stats["mirror_syncs"] += 1
+            self.stats["mirror_bytes"] += moved
         # zero-cost migration: promote replica, demote primary
         dst.promote_replica(r_slot, req)
         src.demote_to_replica(p_slot, of=(dst.instance_id, r_slot))

@@ -36,6 +36,19 @@ class InstanceView(Protocol):
         """Global instance index (engine ``instance_id`` / sim ``iid``)."""
         ...
 
+    # -- fleet state --------------------------------------------------------
+    def alive(self) -> bool:
+        """Whether this instance is serving at all.  Dead instances stay
+        in the view sequence (indices are stable across fleet events);
+        every kernel decision must skip them."""
+        ...
+
+    def draining(self) -> bool:
+        """Instance is alive but cordoned: it finishes resident work and
+        accepts no new routing, placement or promotion (graceful
+        scale-down; see repro.fleet)."""
+        ...
+
     # -- capacity -----------------------------------------------------------
     def free_slots(self) -> int:
         """Free request slots (live) or residual batch slack (sim)."""
@@ -129,6 +142,13 @@ class InstanceView(Protocol):
         """rid -> line up to which this instance's replica of rid has
         been mirrored (the ``from_line`` of a delta MirrorSync)."""
         ...
+
+
+def usable(view: InstanceView) -> bool:
+    """May new work land on this instance?  The single aliveness gate
+    every kernel routes/places/promotes through: alive and not
+    draining."""
+    return view.alive() and not view.draining()
 
 
 @runtime_checkable

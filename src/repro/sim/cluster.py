@@ -34,6 +34,17 @@ class SimInstance:
     replicas: Dict[int, SimRequest] = field(default_factory=dict)
     prefill_queue: List[SimRequest] = field(default_factory=list)
     busy: bool = False
+    #: fleet state (repro.fleet): dead instances stay in the list so
+    #: indices remain stable; ``epoch`` bumps on kill so in-flight
+    #: ``inst_done`` events from a previous life are ignored
+    alive: bool = True
+    draining: bool = False
+    epoch: int = 0
+    #: sparse replica lag marks: rid -> synced line.  The sim prices the
+    #: mirror inside the decode step, so replicas are current (and
+    #: absent from this dict) unless a fleet event or an injected lag
+    #: says otherwise; ``replica_synced`` falls back to ``total_len``.
+    synced_marks: Dict[int, int] = field(default_factory=dict)
     # peak memory tracking (paper Fig. 9)
     peak_state_bytes: float = 0.0
     busy_time: float = 0.0
@@ -107,11 +118,29 @@ class Policy:
         resources without scanning global history)."""
         pass
 
+    def on_fleet_event(self, ev, ctrl):
+        """Apply a :mod:`repro.fleet` event (kill / join / drain).
+        ``ctrl`` is the run's ``FleetController`` — the policy applies
+        the controller's failover plan to its own bookkeeping."""
+        raise NotImplementedError(
+            f"policy {self.name} has no fleet support")
+
+    def settle_drains(self, ctrl):
+        """Retire draining instances whose residents have completed
+        (called by the event loop after each event when a fleet is
+        active)."""
+        pass
+
 
 class Simulator:
     def __init__(self, policy: Policy, perf: PerfModel, n_instances: int,
                  max_batch: int = 64, block_lines: int = 16):
         self.perf = perf
+        # remembered so fleet joins build replacement instances with the
+        # original shape (mirrors LiveCluster._engine_kwargs)
+        self.max_batch = max_batch
+        self.block_lines = block_lines
+        self.fleet = None            # FleetController of the active run
         self.instances = [SimInstance(i, perf, max_batch, block_lines)
                           for i in range(n_instances)]
         self.policy = policy
@@ -155,7 +184,7 @@ class Simulator:
 
     def kick(self, inst: SimInstance):
         """Start the next iteration on an idle instance."""
-        if inst.busy:
+        if inst.busy or not inst.alive:
             return
         if inst.iid in self._kicking:
             return
@@ -172,7 +201,7 @@ class Simulator:
         inst.busy = True
         inst.busy_time += dur
         inst._running = (plan, tuple(inst.decode_batch), self.now)
-        self.push(self.now + dur, "inst_done", inst.iid)
+        self.push(self.now + dur, "inst_done", (inst.iid, inst.epoch))
 
     # -- event handlers -----------------------------------------------------------
     def _handle_arrival(self, req: SimRequest):
@@ -183,8 +212,11 @@ class Simulator:
         inst.prefill_queue.append(req)
         self.kick(inst)
 
-    def _handle_done(self, iid: int):
+    def _handle_done(self, data):
+        iid, epoch = data if isinstance(data, tuple) else (data, 0)
         inst = self.instances[iid]
+        if not inst.alive or epoch != inst.epoch or inst._running is None:
+            return      # the iteration died with its instance (fleet kill)
         plan, batch_snapshot, started = inst._running
         inst.busy = False
         inst._running = None
@@ -231,6 +263,20 @@ class Simulator:
     def _handle_join(self, data):
         iid, req = data
         inst = self.instances[iid]
+        if not inst.alive or inst.draining:
+            # the decode target died/cordoned while the KV transfer was
+            # in flight: the state is lost, the request re-prefills
+            from repro.fleet import reset_for_reprefill
+            if self.fleet is not None:
+                self.fleet.note("requeue", req.rid)
+                self.fleet.stats["requeues"] += 1
+                self.fleet.stats["lost_decode_tokens"] += req.generated
+                self.fleet.stats["reprefill_tokens"] += \
+                    reset_for_reprefill(req)
+            else:
+                reset_for_reprefill(req)
+            self.push(self.now, "arrival", req)
+            return
         inst.decode_batch[req.rid] = req
         inst.note_peak()
         self.kick(inst)
@@ -265,7 +311,8 @@ class Simulator:
     # -- main loop ---------------------------------------------------------------
     def run(self, requests: Optional[List[SimRequest]] = None,
             horizon: float = float("inf"),
-            source: Optional[RequestSource] = None):
+            source: Optional[RequestSource] = None,
+            fleet=None):
         """Run to completion (or ``horizon``).
 
         ``requests`` is the classic pre-materialized list; ``source`` is a
@@ -273,7 +320,15 @@ class Simulator:
         the event heap directly (one traffic time unit == one modeled
         second), closed-loop sources keep ``source.concurrency`` requests
         in flight, issuing the next on each completion.
+
+        ``fleet`` is a :class:`repro.fleet.FleetController`: its event
+        stream (kills / joins / drains, in modeled seconds) lands on the
+        same heap and dispatches through ``policy.on_fleet_event``.
         """
+        if fleet is not None:
+            self.fleet = fleet
+            for ev in fleet.drain_all():
+                self.push(ev.t, "fleet", ev)
         if source is not None:
             if source.concurrency:
                 self._pump = iter(source)
@@ -299,6 +354,11 @@ class Simulator:
                 self._handle_done(data)
             elif kind == "join_decode":
                 self._handle_join(data)
+            elif kind == "fleet":
+                self.policy.on_fleet_event(data, self.fleet)
+            if self.fleet is not None and any(i.draining
+                                              for i in self.instances):
+                self.policy.settle_drains(self.fleet)
             self._sample_timeline()
             if self._pump is not None:
                 self._pump_refill()

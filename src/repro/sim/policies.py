@@ -33,9 +33,12 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.fleet import (Drain, FleetController, JoinInstance, KillInstance,
+                         reset_for_reprefill, rollback_tokens)
 from repro.scheduling.accellm import AcceLLMScheduler
-from repro.scheduling.actions import (Action, Decode, EvictReplica, Prefill,
-                                      PromoteReplica, StreamState)
+from repro.scheduling.actions import (Action, Decode, EvictReplica,
+                                      MirrorSync, Prefill, PromoteReplica,
+                                      StreamState)
 from repro.scheduling.base import MAX_PREFILL_BATCH, SchedulerPolicy
 from repro.scheduling.baselines import (SarathiScheduler, SplitwiseScheduler,
                                         VLLMScheduler)
@@ -66,6 +69,13 @@ class SimInstanceView:
     @property
     def index(self) -> int:
         return self._i.iid
+
+    # -- fleet state ---------------------------------------------------------
+    def alive(self) -> bool:
+        return self._i.alive
+
+    def draining(self) -> bool:
+        return self._i.draining
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> int:
@@ -137,8 +147,11 @@ class SimInstanceView:
 
     def replica_synced(self) -> Dict[int, int]:
         # the simulator executes the mirror inside the decode-step cost,
-        # so a replica is current as of its request's last decode
-        return {rid: r.total_len for rid, r in self._i.replicas.items()}
+        # so a replica is current as of its request's last decode —
+        # unless a sparse lag mark says a sync was skipped (fleet races,
+        # partial-sync injection in tests)
+        return {rid: self._i.synced_marks.get(rid, r.total_len)
+                for rid, r in self._i.replicas.items()}
 
 
 class SimClusterView:
@@ -248,6 +261,167 @@ class KernelPolicy(Policy):
     def _prefill_actions(inst: SimInstance, reqs) -> List[Action]:
         return [Prefill(r.rid, inst.iid, r.prompt_len, req=r) for r in reqs]
 
+    # -- fleet mechanics (repro.fleet) ----------------------------------------
+    def on_fleet_event(self, ev, ctrl: FleetController):
+        if isinstance(ev, KillInstance):
+            self._fleet_kill(ev.instance, ctrl)
+        elif isinstance(ev, JoinInstance):
+            self._fleet_join(ev.instance, ctrl)
+        elif isinstance(ev, Drain):
+            self._fleet_drain(ev.instance, ctrl)
+        else:
+            raise ValueError(f"unknown fleet event {ev!r}")
+
+    def _rebind_topology(self):
+        """Membership changed (join appended an instance / revived an
+        index): adapters with a static topology recompute it here."""
+        pass
+
+    def _fleet_kill(self, iid: int, ctrl: FleetController):
+        """Same contract (and trace order) as ``LiveCluster.fleet_kill``:
+        promote onto warm replicas, re-queue what is truly lost, drop
+        orphaned replicas, re-route the prefill backlog."""
+        sim = self.sim
+        inst = sim.instances[iid]
+        if not inst.alive:
+            return
+        ctrl.note("kill", iid)
+        ctrl.stats["kills"] += 1
+        # the in-flight iteration dies with the instance: prompts whose
+        # final chunk was executing left the queue at compile time —
+        # recover them so they re-queue like the rest of the backlog
+        if inst._running is not None:
+            pf = prefill_part(inst._running[0])
+            if pf is not None:
+                inst.prefill_queue[:0] = [it.req for it in pf.items
+                                          if it.completes]
+            inst._running = None
+            inst.busy = False
+        inst.epoch += 1          # stale inst_done events are ignored
+        plan = ctrl.plan_failover(self.view(), iid)
+        # 1. promotions: the warm replica takes over at its synced line
+        for pr in plan.promotions:
+            r = inst.decode_batch.pop(pr.rid)
+            dst = sim.instances[pr.dst]
+            if pr.lost_lines:
+                rollback_tokens(r, pr.lost_lines)
+                ctrl.stats["lost_lines"] += pr.lost_lines
+            dst.decode_batch[pr.rid] = r
+            dst.replicas.pop(pr.rid, None)
+            dst.synced_marks.pop(pr.rid, None)
+            self.placement[pr.rid] = (pr.dst, None)
+            ctrl.note("promote", pr.rid, pr.src, pr.dst, pr.lost_lines)
+            ctrl.stats["promotions"] += 1
+            dst.note_peak()
+        # 2. truly lost state: re-enters the heap as an arrival NOW
+        # (never re-appended to sim.submitted — each rid stays
+        # single-counted in the metrics)
+        def _requeue_resident(rid: int, r: SimRequest):
+            ctrl.note("requeue", rid)
+            ctrl.stats["requeues"] += 1
+            ctrl.stats["lost_decode_tokens"] += r.generated
+            ctrl.stats["reprefill_tokens"] += reset_for_reprefill(r)
+            self.planner.forget(rid)
+            old = self.placement.pop(rid, (None, None))
+            if old[1] is not None and old[1] != iid:
+                sim.instances[old[1]].replicas.pop(rid, None)
+                sim.instances[old[1]].synced_marks.pop(rid, None)
+            sim.push(sim.now, "arrival", r)
+
+        for rid in plan.requeues:
+            _requeue_resident(rid, inst.decode_batch.pop(rid))
+        # residents invisible to the placement ledger (the baseline
+        # adapters never maintain one — the live executor tracks
+        # placements for every policy): same fate, rid order
+        for rid in sorted(inst.decode_batch):
+            _requeue_resident(rid, inst.decode_batch.pop(rid))
+        # 3. replicas this instance hosted for surviving primaries
+        for rid in plan.dropped_replicas:
+            pl = self.placement.get(rid)
+            if pl:
+                self.placement[rid] = (pl[0], None)
+            ctrl.note("drop_replica", rid)
+        # 4. routed-but-unstarted prompts re-route (no tokens re-run);
+        # 5. prompts mid-chunk lose their partial prefill work
+        fresh = [r for r in inst.prefill_queue
+                 if self.planner.cursor(r.rid) == 0]
+        mid = [r for r in inst.prefill_queue
+               if self.planner.cursor(r.rid) > 0]
+        for r in fresh:
+            ctrl.note("requeue", r.rid)
+            ctrl.stats["requeue_backlog"] += 1
+            sim.push(sim.now, "arrival", r)
+        for r in mid:
+            ctrl.note("requeue", r.rid)
+            ctrl.stats["requeues"] += 1
+            ctrl.stats["reprefill_tokens"] += self.planner.cursor(r.rid)
+            self.planner.forget(r.rid)
+            reset_for_reprefill(r)
+            sim.push(sim.now, "arrival", r)
+        inst.prefill_queue = []
+        inst.replicas.clear()
+        inst.synced_marks.clear()
+        inst.alive = False
+        inst.draining = False
+        for other in sim.instances:
+            sim.kick(other)
+
+    def _fleet_join(self, iid: Optional[int], ctrl: FleetController):
+        sim = self.sim
+        if iid is not None and iid < len(sim.instances):
+            inst = sim.instances[iid]
+            if inst.alive:
+                return           # join of a live index: no-op
+            # replacement hardware at the same rank (state died at kill)
+            inst.alive = True
+            inst.draining = False
+        else:
+            inst = SimInstance(len(sim.instances), sim.perf, sim.max_batch,
+                               sim.block_lines)
+            sim.instances.append(inst)
+        ctrl.note("join", inst.iid)
+        ctrl.stats["joins"] += 1
+        self._rebind_topology()
+        # warm scale-up: the kernel mirrors resident requests onto the
+        # joined instance before any new arrival routes there
+        for act in self.kernel.warm_on_join(self.view(), inst.iid):
+            if not isinstance(act, StreamState) or not act.as_replica:
+                continue
+            r = sim.instances[act.src].decode_batch.get(act.rid)
+            if r is None:
+                continue
+            inst.replicas[act.rid] = r
+            self.placement[act.rid] = (act.src, inst.iid)
+            ctrl.stats["warm_streams"] += 1
+        inst.note_peak()
+        sim.kick(inst)
+
+    def _fleet_drain(self, iid: int, ctrl: FleetController):
+        inst = self.sim.instances[iid]
+        if not inst.alive or inst.draining:
+            return
+        inst.draining = True
+        ctrl.note("drain", iid)
+        ctrl.stats["drains"] += 1
+        self.settle_drains(ctrl)
+
+    def settle_drains(self, ctrl: FleetController):
+        for inst in self.sim.instances:
+            if not (inst.draining and inst.alive):
+                continue
+            if inst.busy or inst.decode_batch or inst.prefill_queue:
+                continue
+            # only replicas remain: surrender the copies and retire
+            for rid in list(inst.replicas):
+                pl = self.placement.get(rid)
+                if pl and pl[1] == inst.iid:
+                    self.placement[rid] = (pl[0], None)
+            inst.replicas.clear()
+            inst.synced_marks.clear()
+            inst.alive = False
+            inst.draining = False
+            ctrl.note("drained", inst.iid)
+
 
 # ---------------------------------------------------------------------------
 # vLLM
@@ -317,8 +491,11 @@ class SplitwisePolicy(KernelPolicy):
 
     def bind(self, sim):
         super().bind(sim)
-        self.prefill_insts = sim.instances[: self.n_prefill]
-        self.decode_insts = sim.instances[self.n_prefill:]
+        self._rebind_topology()
+
+    def _rebind_topology(self):
+        self.prefill_insts = self.sim.instances[: self.n_prefill]
+        self.decode_insts = self.sim.instances[self.n_prefill:]
 
     def next_plan(self, inst):
         if inst in self.prefill_insts:
@@ -366,17 +543,26 @@ class AcceLLMPolicy(KernelPolicy):
 
     def bind(self, sim):
         super().bind(sim)
-        n = len(sim.instances)
-        assert n % 2 == 0, "AcceLLM organizes instances in pairs"
-        self.pairs = [(sim.instances[i], sim.instances[i + 1])
-                      for i in range(0, n, 2)]
+        assert len(sim.instances) % 2 == 0, \
+            "AcceLLM organizes instances in pairs"
+        self._rebind_topology()
+
+    def _rebind_topology(self):
+        # pairs over floor(n/2): a join may append an odd instance,
+        # which stays unpaired (partner() -> None) until its mate joins
+        insts = self.sim.instances
+        self.pairs = [(insts[i], insts[i + 1])
+                      for i in range(0, len(insts) - 1, 2)]
         self.pair_of = {}
         for pa, pb in self.pairs:
             self.pair_of[pa.iid] = (pa, pb)
             self.pair_of[pb.iid] = (pa, pb)
 
-    def partner(self, inst: SimInstance) -> SimInstance:
-        pa, pb = self.pair_of[inst.iid]
+    def partner(self, inst: SimInstance) -> Optional[SimInstance]:
+        pair = self.pair_of.get(inst.iid)
+        if pair is None:
+            return None
+        pa, pb = pair
         return pb if inst is pa else pa
 
     # -- dynamic roles ---------------------------------------------------------
@@ -410,6 +596,8 @@ class AcceLLMPolicy(KernelPolicy):
 
     def _handoff_decodes(self, inst):
         partner = self.partner(inst)
+        if partner is None or not partner.alive or partner.draining:
+            return
         if (partner.busy and partner._running
                 and not isinstance(partner._running[0], DecodePlan)):
             return
@@ -417,6 +605,8 @@ class AcceLLMPolicy(KernelPolicy):
             pl = self.placement.get(rid, (None, None))
             if pl[1] != partner.iid:
                 continue  # no replica on partner: this request must stall
+            if rid in partner.synced_marks:
+                continue  # stale replica cannot take the primary role
             r = inst.decode_batch.pop(rid)
             partner.decode_batch[rid] = r
             partner.replicas.pop(rid, None)
@@ -454,7 +644,8 @@ class AcceLLMPolicy(KernelPolicy):
             dst.note_peak()
             if rep_iid is not None:
                 self.sim.instances[rep_iid].note_peak()
-        self.sim.kick(partner)
+        if partner is not None:
+            self.sim.kick(partner)
 
     def on_decode_done(self, inst, finished):
         # drop replicas of exactly the requests that finished this
@@ -464,22 +655,33 @@ class AcceLLMPolicy(KernelPolicy):
             pl = self.placement.pop(r.rid, None)
             if pl and pl[1] is not None:
                 self.sim.instances[pl[1]].replicas.pop(r.rid, None)
+                self.sim.instances[pl[1]].synced_marks.pop(r.rid, None)
         self._rebalance(inst)
 
     # -- load balancing by count + state bytes (§4.1.3) -------------------------
     def _rebalance(self, inst):
-        pa, pb = self.pair_of[inst.iid]
+        pair = self.pair_of.get(inst.iid)
+        if pair is None:
+            return
+        pa, pb = pair
         if pa.busy or pb.busy:
             return
         actions = self.kernel.rebalance(self.view(), inst.iid // 2)
         for act in actions:
+            if isinstance(act, MirrorSync):
+                # catch-up delta ahead of a promotion: the stale replica
+                # absorbs the lines it was missing and is current again
+                self.sim.instances[act.replica].synced_marks.pop(
+                    act.rid, None)
+                continue
             assert isinstance(act, PromoteReplica)
             src = self.sim.instances[act.src]
             dst = self.sim.instances[act.dst]
             r = src.decode_batch.pop(act.rid)
             dst.decode_batch[act.rid] = r
-            # zero-cost: dst already held the replica; roles swap
+            # zero-cost: dst already held the (now current) replica
             dst.replicas.pop(act.rid, None)
+            dst.synced_marks.pop(act.rid, None)
             src.replicas[act.rid] = r
             self.placement[act.rid] = (act.dst, act.src)
         if actions:

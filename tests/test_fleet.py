@@ -1,0 +1,529 @@
+"""The fleet layer (repro.fleet): fault injection, replica failover and
+warm autoscaling — one deterministic event schedule, one failover
+contract, two executors.
+
+The load-bearing check mirrors test_scheduling's golden trace: the same
+arrival script with a mid-serve kill and a warm rejoin must produce the
+IDENTICAL kernel trace (route/place/warm/rebalance) AND the identical
+fleet-controller trace (kill/promote/requeue/drop_replica/join) whether
+the fleet events hit the live-engine executor or the simulator adapter.
+"""
+import heapq
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.fleet import (Drain, FixedFleet, FleetController, JoinInstance,
+                         KillInstance, PoissonFailures, load_fleet_trace,
+                         reset_for_reprefill, rollback_tokens,
+                         save_fleet_trace)
+from repro.models import init_params
+from repro.scheduling import (AcceLLMScheduler, LiveCluster, MirrorSync,
+                              PromoteReplica)
+from repro.serving import Request
+from repro.sim import (H100, InstanceSpec, PerfModel, Simulator, SimRequest,
+                       make_workload, summarize)
+from repro.sim.policies import AcceLLMPolicy, SplitwisePolicy, VLLMPolicy
+from repro.workloads import SLO, slo_summary
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _perf(cfg=None):
+    return PerfModel(cfg or get_config("llama2-70b"), InstanceSpec(H100, 4))
+
+
+# ---------------------------------------------------------------------------
+# schedules: deterministic streams + JSONL round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_fleet_stream_is_time_sorted():
+    sched = FixedFleet((JoinInstance(9.0, 1), KillInstance(3.0, 1),
+                        Drain(3.0, 0)))
+    evs = sched.stream(seed=0)
+    assert [e.t for e in evs] == [3.0, 3.0, 9.0]
+    # stable: same-instant events keep emission order
+    assert isinstance(evs[0], KillInstance) and isinstance(evs[1], Drain)
+    # the stream is independent of the seed (nothing is random)
+    assert sched.stream(seed=7) == evs
+
+
+def test_poisson_failures_seeded_and_bounded():
+    sched = PoissonFailures(mtbf=5.0, duration=100.0, n_instances=4,
+                            recovery=2.0)
+    a, b = sched.stream(seed=0), sched.stream(seed=0)
+    assert a == b, "same seed must replay the identical failure stream"
+    assert a != sched.stream(seed=1)
+    kills = [e for e in a if isinstance(e, KillInstance)]
+    joins = [e for e in a if isinstance(e, JoinInstance)]
+    assert kills, "mtbf=5 over 100 units must produce failures"
+    assert all(0.0 < e.t < 100.0 for e in kills)
+    assert all(0 <= e.instance < 4 for e in kills)
+    # each kill is followed by replacement hardware at the same rank
+    assert len(joins) == len(kills)
+    by_t = sorted(a, key=lambda e: e.t)
+    assert [e.t for e in by_t] == [e.t for e in a], "stream() sorts"
+    # no recovery -> kills only
+    dark = PoissonFailures(mtbf=5.0, duration=100.0, n_instances=4)
+    assert all(isinstance(e, KillInstance) for e in dark.stream(seed=0))
+
+
+def test_fleet_trace_jsonl_round_trip(tmp_path):
+    events = [KillInstance(1.5, 2), JoinInstance(4.0, None),
+              JoinInstance(5.0, 2), Drain(9.0, 0)]
+    path = tmp_path / "fleet.jsonl"
+    assert save_fleet_trace(path, events) == 4
+    loaded = load_fleet_trace(path)
+    assert isinstance(loaded, FixedFleet)
+    assert loaded.stream(seed=0) == events
+    # a kill without an instance is not a valid record
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"t": 1.0, "event": "kill"}\n')
+    with pytest.raises(ValueError):
+        load_fleet_trace(bad)
+
+
+def test_controller_paces_and_drains():
+    ctrl = FleetController(FixedFleet((KillInstance(2.0, 0),
+                                       JoinInstance(5.0, 0),
+                                       Drain(9.0, 1))))
+    assert ctrl.next_time() == 2.0
+    assert ctrl.due(1.0) == []
+    due = ctrl.due(5.0)
+    assert [e.t for e in due] == [2.0, 5.0]
+    assert not ctrl.exhausted() and ctrl.next_time() == 9.0
+    rest = ctrl.drain_all()          # event-heap executors take the tail
+    assert [e.t for e in rest] == [9.0]
+    assert ctrl.exhausted() and ctrl.due(100.0) == []
+
+
+# ---------------------------------------------------------------------------
+# the failover contract (shared decision, tested through the sim views)
+# ---------------------------------------------------------------------------
+
+
+def _resident(sim, pol, rid, primary, replica, prompt=16, decode=8, gen=3):
+    r = SimRequest(rid=rid, arrival=0.0, prompt_len=prompt, decode_len=decode)
+    r.generated = gen
+    sim.instances[primary].decode_batch[rid] = r
+    if replica is not None:
+        sim.instances[replica].replicas[rid] = r
+    pol.placement[rid] = (primary, replica)
+    return r
+
+
+def test_plan_failover_contract():
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=2)
+    pol = sim.policy
+    _resident(sim, pol, 7, primary=1, replica=0)   # promoted
+    _resident(sim, pol, 3, primary=1, replica=None)  # truly lost
+    _resident(sim, pol, 5, primary=0, replica=1)   # orphaned replica
+    plan = FleetController().plan_failover(pol.view(), dead=1)
+    assert plan.dead == 1
+    assert [p.rid for p in plan.promotions] == [7]
+    assert plan.promotions[0].dst == 0
+    assert plan.promotions[0].lost_lines == 0       # replica is current
+    assert plan.requeues == [3]
+    assert plan.dropped_replicas == [5]
+
+
+def test_plan_failover_skips_unusable_replica_host():
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=4)
+    pol = sim.policy
+    _resident(sim, pol, 1, primary=1, replica=0)
+    sim.instances[0].draining = True    # cordoned host can't take primaries
+    plan = FleetController().plan_failover(pol.view(), dead=1)
+    assert plan.promotions == [] and plan.requeues == [1]
+
+
+def test_lifecycle_helpers_roll_back_state():
+    r = SimRequest(rid=0, arrival=2.5, prompt_len=10, decode_len=6)
+    r.generated = 4
+    r.token_times.extend([3.0, 3.1, 3.2, 3.3])
+    r.first_token_time = 3.0
+    rollback_tokens(r, 2)
+    assert r.generated == 2 and len(r.token_times) == 2
+    assert reset_for_reprefill(r) == 10
+    assert r.generated == 0 and not r.token_times
+    assert r.first_token_time is None
+    assert r.arrival == 2.5, "re-prefill keeps the arrival stamp (SLO damage)"
+
+
+# ---------------------------------------------------------------------------
+# golden fleet trace: live executor vs simulator adapter, same script
+# ---------------------------------------------------------------------------
+
+# arrival script with a mid-serve kill and a warm rejoin; decode lengths
+# keep requests resident across both fleet events
+_FLEET_SCRIPT = [
+    ("arrive", 8, 10), ("tick",), ("arrive", 12, 12), ("arrive", 6, 12),
+    ("tick",), ("kill", 1), ("tick",), ("arrive", 9, 8), ("tick",),
+    ("join", 1), ("tick",), ("tick",),
+]
+
+
+def _run_live_fleet(cfg, params, kernel, script):
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=kernel)
+    key = jax.random.PRNGKey(7)
+    rids, reqs = [], []
+    for i, op in enumerate(script):
+        if op[0] == "arrive":
+            plen, dlen = op[1], op[2]
+            req = Request(prompt_len=plen, max_new_tokens=dlen,
+                          prompt_tokens=jax.random.randint(
+                              jax.random.fold_in(key, i), (1, plen), 0,
+                              cfg.vocab_size))
+            rids.append(req.rid)
+            reqs.append(req)
+            cluster.submit(req)
+        elif op[0] == "kill":
+            cluster.fleet_kill(op[1])
+        elif op[0] == "join":
+            cluster.fleet_join(op[1])
+        cluster.step()
+    steps = 0
+    while cluster.pending() and steps < 120:
+        cluster.step()
+        steps += 1
+    assert not cluster.pending()
+    for r in reqs:
+        assert len(r.output_tokens) == r.max_new_tokens, \
+            "a fleet event must not lose or truncate a request"
+    return cluster, rids, steps
+
+
+def _run_sim_fleet(cfg, rids, extra_steps, script, redundancy):
+    """Lock-step simulator drive of the same script (the test_scheduling
+    harness plus fleet ops): kills/joins land through the adapter's
+    fleet hooks, re-queued requests drain from the event heap back to
+    the front of the driver's queue — exactly where the live executor
+    puts them."""
+    kernel = AcceLLMScheduler(redundancy=redundancy)
+    kernel.trace = []
+    sim = Simulator(AcceLLMPolicy(kernel=kernel), _perf(cfg), n_instances=2)
+    sim.kick = lambda inst: None          # event mechanics not under test
+    pol = sim.policy
+    ctrl = FleetController()
+    finished_rids = []
+
+    def drain_requeues():
+        out = []
+        while sim._heap:
+            _, _, kind, data = heapq.heappop(sim._heap)
+            if kind == "arrival":
+                out.append(data)
+        return out
+
+    def tick(skip_iid=None):
+        finished = {}
+        for inst in sim.instances:
+            if not inst.alive or inst.iid == skip_iid:
+                continue
+            done_here = []
+            for rid, r in list(inst.decode_batch.items()):
+                r.generated += 1
+                if r.done:
+                    del inst.decode_batch[rid]
+                    done_here.append(r)
+                    finished_rids.append(rid)
+            finished[inst.iid] = done_here
+        for inst in sim.instances:
+            if inst.iid in finished:
+                pol.on_decode_done(inst, finished[inst.iid])
+
+    queue = []
+
+    def step_once():
+        skip = None
+        if queue:                          # admissions_per_step == 1
+            r = queue[0]
+            inst = pol.route(r)
+            if inst is not None:
+                queue.pop(0)
+                r.generated = 1            # the prefill's first token
+                pol.on_prefill_done(inst, [r])
+                skip = inst.iid
+        tick(skip_iid=skip)
+
+    arrivals = iter(rids)
+    for op in script:
+        if op[0] == "arrive":
+            queue.append(SimRequest(rid=next(arrivals), arrival=0.0,
+                                    prompt_len=op[1], decode_len=op[2]))
+        elif op[0] == "kill":
+            pol._fleet_kill(op[1], ctrl)
+            queue[:0] = drain_requeues()
+        elif op[0] == "join":
+            pol._fleet_join(op[1], ctrl)
+        step_once()
+    for _ in range(extra_steps):
+        step_once()
+    return kernel.trace, ctrl, finished_rids
+
+
+@pytest.mark.parametrize("redundancy", [True, False])
+def test_golden_fleet_trace_live_vs_sim(setup, redundancy):
+    cfg, params = setup
+    live_kernel = AcceLLMScheduler(redundancy=redundancy)
+    live_kernel.trace = []
+    cluster, rids, extra = _run_live_fleet(cfg, params, live_kernel,
+                                           _FLEET_SCRIPT)
+    sim_trace, sim_ctrl, sim_finished = _run_sim_fleet(
+        cfg, rids, extra, _FLEET_SCRIPT, redundancy)
+
+    assert live_kernel.trace == sim_trace, (
+        "shared kernel diverged across backends under fleet events:\n"
+        f"live: {live_kernel.trace}\nsim:  {sim_trace}")
+    live_ctrl = cluster.fleet
+    assert live_ctrl.trace == sim_ctrl.trace, (
+        "fleet controller made different failover decisions:\n"
+        f"live: {live_ctrl.trace}\nsim:  {sim_ctrl.trace}")
+    assert live_ctrl.stats == sim_ctrl.stats
+    assert set(sim_finished) == set(rids)
+
+    kinds = {e[0] for e in live_ctrl.trace}
+    assert {"kill", "join"} <= kinds
+    if redundancy:
+        # the AcceLLM payoff: the kill is absorbed by promotions, and
+        # the rejoined instance is warmed with replicas before traffic
+        assert live_ctrl.stats["promotions"] > 0
+        assert live_ctrl.stats["requeues"] == 0
+        assert live_ctrl.stats["reprefill_tokens"] == 0
+        assert live_ctrl.stats["warm_streams"] > 0
+        assert "warm" in {e[0] for e in live_kernel.trace}
+    else:
+        # no replicas: every resident of the dead instance re-prefills
+        assert live_ctrl.stats["promotions"] == 0
+        assert live_ctrl.stats["requeues"] > 0
+        assert live_ctrl.stats["reprefill_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# partial sync: a stale replica must catch up before taking the primary
+# role (regression: promotions used to assume the mirror was current)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_rebalance_emits_catchup_sync_first():
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=2)
+    pol = sim.policy
+    for rid in (0, 1, 2):
+        r = _resident(sim, pol, rid, primary=0, replica=1, gen=4)
+        # every replica lags two lines behind its primary
+        sim.instances[1].synced_marks[rid] = r.total_len - 2
+    actions = pol.kernel.rebalance(pol.view(), 0)
+    promotes = [a for a in actions if isinstance(a, PromoteReplica)]
+    assert promotes, "3-vs-0 imbalance must promote"
+    for p in promotes:
+        i = actions.index(p)
+        assert i > 0 and isinstance(actions[i - 1], MirrorSync), \
+            "stale replica must absorb the catch-up delta before the flip"
+        sync = actions[i - 1]
+        assert sync.rid == p.rid
+        assert sync.to_line - sync.from_line == 2
+    # applying through the adapter clears the lag marks
+    pol._rebalance(sim.instances[0])
+    for p in promotes:
+        assert p.rid not in sim.instances[1].synced_marks
+        assert p.rid in sim.instances[1].decode_batch
+
+
+def test_sim_handoff_refuses_stale_replica():
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=2)
+    pol = sim.policy
+    r = _resident(sim, pol, 4, primary=0, replica=1, gen=3)
+    sim.instances[1].synced_marks[4] = r.total_len - 1
+    pol._handoff_decodes(sim.instances[0])
+    assert 4 in sim.instances[0].decode_batch, \
+        "a lagging replica cannot take the primary role"
+    del sim.instances[1].synced_marks[4]
+    pol._handoff_decodes(sim.instances[0])
+    assert 4 in sim.instances[1].decode_batch
+
+
+def test_live_promote_backstop_syncs_stale_replica(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=AcceLLMScheduler())
+    req = Request(prompt_len=8, max_new_tokens=8,
+                  prompt_tokens=jax.random.randint(
+                      jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab_size))
+    cluster.submit(req)
+    cluster.step()
+    cluster.step()
+    pl = cluster.placements[req.rid]
+    assert pl.replica is not None, "redundancy must mirror the request"
+    p_idx, r_idx = pl.primary[0], pl.replica[0]
+    src = cluster.engines[p_idx]
+    dst = cluster.engines[r_idx]
+    # force the replica's ledger behind the primary (a skipped sync)
+    lines = src.store.lines(req.rid)
+    dst.store.mark_synced(req.rid, lines - 1)
+    before = cluster.stats["mirror_syncs"]
+    cluster._apply_promote(PromoteReplica(req.rid, src=p_idx, dst=r_idx))
+    assert cluster.stats["mirror_syncs"] == before + 1, \
+        "executor backstop must emit the catch-up delta"
+    assert cluster.engines[r_idx].store.synced_line(req.rid) >= lines
+    assert cluster.placements[req.rid].primary[0] == r_idx
+    cluster.run(max_steps=60)
+    assert len(req.output_tokens) == req.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# single-count accounting: a kill-requeued rid is one request, not two
+# ---------------------------------------------------------------------------
+
+
+def test_sim_kill_requeue_counts_each_rid_once():
+    reqs = make_workload("mixed", rate=6.0, duration=6.0, seed=3)
+    fleet = FleetController(FixedFleet((KillInstance(2.0, 1),)))
+    sim = Simulator(VLLMPolicy(), _perf(), n_instances=2)
+    sim.run(requests=reqs, horizon=600.0, fleet=fleet)
+    assert fleet.stats["kills"] == 1
+    assert fleet.stats["requeues"] + fleet.stats["requeue_backlog"] > 0, \
+        "the kill must actually catch resident requests"
+    # requeues re-enter the heap, never sim.submitted
+    rids = [r.rid for r in sim.submitted]
+    assert len(rids) == len(set(rids)) == len(reqs)
+    done_rids = [r.rid for r in sim.finished]
+    assert len(done_rids) == len(set(done_rids))
+    s = summarize(sim.submitted, n_instances=2, duration=sim.now)
+    assert s.n_finished + s.n_unfinished == len(reqs)
+    rep = slo_summary(sim.submitted, SLO(ttft=3.0, tbt=1.0),
+                      duration=sim.now, unit="s")
+    assert rep.n_submitted == len(reqs)
+    assert rep.n_finished + rep.n_unfinished == len(reqs)
+
+
+@pytest.mark.parametrize("policy_fn", [
+    lambda: AcceLLMPolicy(), lambda: VLLMPolicy(),
+    lambda: SplitwisePolicy(1)], ids=["accellm", "vllm", "splitwise"])
+def test_sim_survives_kill_then_rejoin(policy_fn):
+    reqs = make_workload("mixed", rate=6.0, duration=6.0, seed=5)
+    fleet = FleetController(FixedFleet((KillInstance(2.0, 1),
+                                        JoinInstance(4.0, 1))))
+    sim = Simulator(policy_fn(), _perf(), n_instances=2)
+    sim.run(requests=reqs, horizon=600.0, fleet=fleet)
+    assert fleet.stats["kills"] == 1 and fleet.stats["joins"] == 1
+    rids = [r.rid for r in sim.submitted]
+    assert len(rids) == len(set(rids)) == len(reqs)
+    s = summarize(sim.submitted, n_instances=2, duration=sim.now)
+    assert s.n_finished + s.n_unfinished == len(reqs)
+    assert s.n_finished > 0
+
+
+# ---------------------------------------------------------------------------
+# live executor: drain, dead-instance routing, ServeSpec.fleet
+# ---------------------------------------------------------------------------
+
+
+def _live_req(cfg, i, plen, dlen, key):
+    return Request(prompt_len=plen, max_new_tokens=dlen,
+                   prompt_tokens=jax.random.randint(
+                       jax.random.fold_in(key, i), (1, plen), 0,
+                       cfg.vocab_size))
+
+
+def test_live_drain_settles_after_residents_finish(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=AcceLLMScheduler())
+    key = jax.random.PRNGKey(9)
+    reqs = [_live_req(cfg, i, 6 + i, 4, key) for i in range(2)]
+    for r in reqs:
+        cluster.submit(r)
+    cluster.step()
+    cluster.step()
+    cluster.fleet_drain(1)
+    assert cluster.draining[1]
+    late = [_live_req(cfg, 10 + i, 7, 3, key) for i in range(2)]
+    for r in late:
+        cluster.submit(r)
+    cluster.run(max_steps=120)
+    for r in reqs + late:
+        assert len(r.output_tokens) == r.max_new_tokens
+    assert not cluster.alive[1] and not cluster.draining[1], \
+        "a cordoned instance retires once its residents complete"
+    trace = cluster.fleet.trace
+    assert ("drain", 1) in trace and ("drained", 1) in trace
+    # the cordoned side held no late primaries at the end
+    assert not cluster.engines[1].slot_req
+
+
+@pytest.mark.parametrize("policy", ["vllm", "splitwise"])
+def test_live_baselines_route_around_dead_instance(setup, policy):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=6,
+                          kv_capacity=128, policy=policy)
+    # vllm: kill a peer; splitwise: kill the decode tier (requests then
+    # decode on the surviving prefiller — graceful degradation)
+    victim = 0 if policy == "vllm" else 1
+    cluster.fleet_kill(victim)
+    key = jax.random.PRNGKey(4)
+    reqs = [_live_req(cfg, i, 6 + i % 3, 3 + i % 2, key) for i in range(3)]
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=200)
+    assert len(done) == 3
+    for r in reqs:
+        assert len(r.output_tokens) == r.max_new_tokens
+    assert not cluster.engines[victim].slot_req, \
+        "no request may land on a dead instance"
+    assert cluster.fleet.stats["kills"] == 1
+
+
+def test_serve_spec_fleet_end_to_end(setup):
+    from repro.api import ServeSpec, serve
+    cfg, params = setup
+    spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
+                     num_slots=6, kv_capacity=128, n_requests=4,
+                     workload="light", max_steps=200,
+                     fleet=FixedFleet((KillInstance(6.0, 1),
+                                       JoinInstance(12.0, 1))))
+    report = serve(spec, cfg=cfg, params=params)
+    assert report.all_finished
+    assert report.fleet_stats is not None
+    assert report.fleet_stats["kills"] == 1
+    assert report.fleet_stats["joins"] == 1
+    assert "fleet:" in report.describe()
+
+
+# ---------------------------------------------------------------------------
+# launch: the k8s-shaped orchestration dry-run mirrors the schedule
+# ---------------------------------------------------------------------------
+
+
+def test_launch_fleet_dry_run_plan():
+    from repro.api import ServeSpec
+    from repro.launch.fleet import dry_run, pod_name
+    spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
+                     fleet=FixedFleet((KillInstance(5.0, 1),
+                                       JoinInstance(9.0, 1),
+                                       Drain(12.0, 0))))
+    plan = dry_run(spec)
+    assert plan["n_instances"] == 2
+    assert len(plan["manifests"]) == 2
+    names = [m["metadata"]["name"] for m in plan["manifests"]]
+    assert len(set(names)) == 2
+    for i, m in enumerate(plan["manifests"]):
+        labels = m["metadata"]["labels"]
+        assert labels["repro/instance"] == str(i)
+        assert labels["repro/pair"] == str(i // 2)
+        assert m["spec"]["restartPolicy"] == "Never"
+    ops = [s["op"] for s in plan["timeline"]]
+    assert ops == ["apply", "wait-ready",          # initial rollout
+                   "delete",                       # KillInstance
+                   "apply", "wait-ready",          # JoinInstance
+                   "cordon",                       # Drain
+                   "teardown"]
+    kill_step = plan["timeline"][2]
+    assert kill_step["grace_period"] == 0
+    assert kill_step["pod"] == pod_name(spec, 1)
