@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_stepplan",        # bucketed batch prefill vs seed path
     "benchmarks.bench_decode",          # paged fused decode vs dense per-step
     "benchmarks.bench_fleet",           # fault injection: failover vs re-prefill
+    "benchmarks.bench_prefix",          # prefix cache: reuse-probability sweep
 ]
 
 

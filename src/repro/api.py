@@ -45,6 +45,12 @@ class ServeSpec:
     #: fused decode ceiling: idle open-loop stretches run up to N decode
     #: iterations as one jitted scan (1 = per-step decode)
     fuse_decode_steps: int = 1
+    #: refcounted radix prefix cache on every engine (repro.prefixcache):
+    #: shared prompt heads prefill once and dedup in HBM
+    prefix_cache: bool = False
+    #: cache retention cap in pool blocks (None: half of each engine's
+    #: block pool)
+    prefix_cache_blocks: Optional[int] = None
     redundancy: bool = True            # forwarded to redundancy-aware policies
     reduced: bool = True               # CPU-sized variant of the architecture
     temperature: float = 0.0
@@ -192,6 +198,8 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
                        eos_token=spec.eos_token,
                        block_lines=spec.block_lines,
                        fuse_decode_steps=spec.fuse_decode_steps,
+                       prefix_cache=spec.prefix_cache,
+                       prefix_cache_blocks=spec.prefix_cache_blocks,
                        fleet=fleet)
 
 

@@ -78,6 +78,17 @@ class BlockLedger:
     instead of raising, ``free_blocks()`` bottoms out at 0, and overflow
     ids are discarded on free.  The live store stays strict — a real
     engine cannot mint HBM.
+
+    Blocks are *refcounted*: ``alloc(..., shared=[...])`` adopts blocks
+    already referenced elsewhere (a resident prefix) into the head of the
+    new table without consuming pool headroom, and ``retain``/``release``
+    let an external holder (the prefix cache) keep blocks alive after
+    their last table drops them.  A block returns to the free list only
+    when its last referent releases it; ``free``/``release`` report the
+    count of blocks *actually* released.  Appending into a shared,
+    partially-filled tail block triggers copy-on-write (the writer gets a
+    private replacement; ``last_cow`` records the swap for stores that
+    also move bytes).
     """
     costs: LineCosts
     num_blocks: int
@@ -90,6 +101,12 @@ class BlockLedger:
     _synced: Dict[int, int] = field(default_factory=dict)
     _free: List[int] = field(default_factory=list)
     _next_overflow: int = 0
+    #: per-block reference counts; a block is either free or in _refs
+    _refs: Dict[int, int] = field(default_factory=dict)
+    #: per-rid head lines backed by blocks adopted via ``shared=``
+    _shared_head: Dict[int, int] = field(default_factory=dict)
+    #: last copy-on-write swap: (rid, old_block, new_block)
+    last_cow: Optional[Tuple[int, int, int]] = None
 
     def __post_init__(self):
         if self.block_lines <= 0:
@@ -105,16 +122,42 @@ class BlockLedger:
         if need <= len(self._free):
             take = self._free[-need:][::-1] if need else []
             del self._free[len(self._free) - need:]
-            return take
-        if self.strict:
-            raise KVStoreError(
-                f"pool exhausted: {need} blocks needed, "
-                f"{len(self._free)} free")
-        take = self._free[::-1]
-        self._free.clear()
-        while len(take) < need:
-            take.append(self._next_overflow)
-            self._next_overflow += 1
+        else:
+            if self.strict:
+                raise KVStoreError(
+                    f"pool exhausted: {need} blocks needed, "
+                    f"{len(self._free)} free")
+            take = self._free[::-1]
+            self._free.clear()
+            while len(take) < need:
+                take.append(self._next_overflow)
+                self._next_overflow += 1
+        for b in take:
+            self._refs[b] = 1
+        return take
+
+    def _take_hinted(self, need: int, block_ids: List[int],
+                     exact: bool) -> List[int]:
+        """Take ``need`` specific free blocks from a placement hint.
+        ``exact`` demands the first ``need`` hint entries be free (alloc
+        contract); otherwise free hint entries are filtered (append)."""
+        if exact:
+            if len(block_ids) < need:
+                raise KVStoreError(
+                    f"{need} blocks needed, hint has {len(block_ids)}")
+            take = list(block_ids[:need])
+            missing = [b for b in take if b not in self._free]
+            if missing:
+                raise KVStoreError(f"blocks {missing} are not free")
+        else:
+            take = [b for b in block_ids if b in self._free][:need]
+            if len(take) < need:
+                raise KVStoreError(
+                    f"pool exhausted: {need} blocks needed, hint has "
+                    f"{len(take)} free")
+        for b in take:
+            self._free.remove(b)
+            self._refs[b] = 1
         return take
 
     # -- derived sizes -------------------------------------------------------
@@ -158,10 +201,28 @@ class BlockLedger:
         return len(self._free)
 
     def used_blocks(self) -> int:
-        # counted from the tables (not num_blocks - free): a non-strict
-        # ledger can overcommit past the nominal pool size
-        return sum(len(t) for t in self.tables.values()) + sum(
-            1 for b in self.fixed_block.values() if b is not None)
+        # counted from the refcounts (not num_blocks - free): a shared
+        # block is one block however many tables reference it, and a
+        # non-strict ledger can overcommit past the nominal pool size
+        return len(self._refs)
+
+    def refcount(self, block: int) -> int:
+        return self._refs.get(block, 0)
+
+    def shared_head_lines(self, rid: int) -> int:
+        """Head lines of ``rid`` backed by blocks adopted from a resident
+        prefix (0 for an unshared request)."""
+        return self._shared_head.get(rid, 0) if rid in self.tables else 0
+
+    def shared_blocks_count(self) -> int:
+        """Distinct blocks currently referenced by more than one holder."""
+        return sum(1 for c in self._refs.values() if c > 1)
+
+    def shared_saved_blocks(self) -> int:
+        """Pool blocks *not* consumed thanks to sharing: Σ (refs − 1).
+        Each extra reference is a block a share-blind allocator would
+        have paid for."""
+        return sum(c - 1 for c in self._refs.values() if c > 1)
 
     def used_bytes_of(self, rid: int) -> float:
         return self.costs.bytes_at(self.lines(rid))
@@ -177,52 +238,86 @@ class BlockLedger:
     # -- mutations -----------------------------------------------------------
     def alloc(self, rid: int, lines: int = 0, *,
               block_ids: Optional[List[int]] = None,
-              synced: Optional[int] = None) -> List[int]:
+              synced: Optional[int] = None,
+              shared: Optional[List[int]] = None) -> List[int]:
         """Admit ``rid`` at ``lines`` KV lines; returns the block ids
         backing it (fixed block first, if any).  ``block_ids`` lets a
         placement-aware caller (the live store's slot-affine layout) pick
-        specific blocks from the free pool."""
+        specific blocks from the free pool.  ``shared`` adopts
+        already-referenced blocks (a resident prefix) as the head of the
+        table: their refcounts go up, no pool headroom is consumed."""
         if rid in self.tables:
             raise KVStoreError(f"rid {rid} already resident")
-        need = self.blocks_for(lines)
+        shared = list(shared or [])
+        n_line = self.line_blocks_for(lines)
+        if len(shared) > n_line:
+            raise KVStoreError(
+                f"rid {rid}: {len(shared)} shared blocks exceed the "
+                f"{n_line} line blocks for {lines} lines")
+        bad = [b for b in shared if b not in self._refs]
+        if bad:
+            raise KVStoreError(f"shared blocks {bad} are not referenced")
+        need = (n_line - len(shared)) + (
+            1 if self.costs.fixed_bytes > 0 else 0)
         if block_ids is not None:
-            if len(block_ids) < need:
-                raise KVStoreError(
-                    f"rid {rid}: {need} blocks needed, hint has "
-                    f"{len(block_ids)}")
-            take = block_ids[:need]
-            missing = [b for b in take if b not in self._free]
-            if missing:
-                raise KVStoreError(f"blocks {missing} are not free")
-            for b in take:
-                self._free.remove(b)
+            try:
+                take = self._take_hinted(need, block_ids, exact=True)
+            except KVStoreError as e:
+                raise KVStoreError(f"rid {rid}: {e}") from None
         else:
             take = self._take(need)
+        for b in shared:
+            self._refs[b] += 1
         fixed = take[0] if self.costs.fixed_bytes > 0 else None
         self.fixed_block[rid] = fixed
-        self.tables[rid] = take[1:] if fixed is not None else take
+        self.tables[rid] = shared + (take[1:] if fixed is not None
+                                     else take)
         self._lines[rid] = lines
         self._synced[rid] = lines if synced is None else synced
+        if shared:
+            self._shared_head[rid] = min(lines,
+                                         len(shared) * self.block_lines)
         return take
 
     def append_line(self, rid: int, n: int = 1,
                     *, block_ids: Optional[List[int]] = None) -> int:
         """Grow ``rid`` by ``n`` lines, pulling new blocks from the pool
-        on boundary crossings; returns the new line count."""
+        on boundary crossings; returns the new line count.
+
+        Copy-on-write: if the append starts inside a *shared* tail block
+        (refcount > 1), the writer first swaps in a private replacement
+        block — recorded in ``last_cow`` — so the other referents keep
+        the original bytes."""
         old = self.lines(rid)
         new = old + n
-        need = self.line_blocks_for(new) - len(self.tables[rid])
+        table = self.tables[rid]
+        self.last_cow = None
+        if (old % self.block_lines != 0 and table
+                and self._refs[table[-1]] > 1):
+            old_b = table[-1]
+            if block_ids is not None:
+                repl = self._take_hinted(1, block_ids, exact=False)[0]
+            else:
+                repl = self._take(1)[0]
+            table[-1] = repl
+            self._decref(old_b)
+            self.last_cow = (rid, old_b, repl)
+            if self._shared_head.get(rid, 0) > (len(table) - 1) \
+                    * self.block_lines:
+                self._shared_head[rid] = (len(table) - 1) \
+                    * self.block_lines
+        need = self.line_blocks_for(new) - len(table)
         if need > 0:
             if block_ids is not None:
-                grab = [b for b in block_ids if b in self._free][:need]
-                if len(grab) < need:
+                try:
+                    grab = self._take_hinted(need, block_ids, exact=False)
+                except KVStoreError:
                     raise KVStoreError(
-                        f"pool exhausted growing rid {rid} to {new} lines")
-                for b in grab:
-                    self._free.remove(b)
+                        f"pool exhausted growing rid {rid} to {new} "
+                        f"lines") from None
             else:
                 grab = self._take(need)
-            self.tables[rid].extend(grab)
+            table.extend(grab)
         self._lines[rid] = new
         return new
 
@@ -239,17 +334,47 @@ class BlockLedger:
     def mark_synced(self, rid: int, line: Optional[int] = None):
         self._synced[rid] = self.lines(rid) if line is None else line
 
+    def _decref(self, block: int) -> bool:
+        """Drop one reference; returns True when the block actually left
+        the pool's used set (last referent)."""
+        c = self._refs.get(block)
+        if c is None:
+            raise KVStoreError(f"block {block} is not referenced")
+        if c > 1:
+            self._refs[block] = c - 1
+            return False
+        del self._refs[block]
+        # overflow ids (non-strict overcommit) evaporate; real ids return
+        if block < self.num_blocks:
+            self._free.append(block)
+        return True
+
+    def retain(self, blocks: List[int]):
+        """External holder (the prefix cache) takes a reference on each
+        block, keeping it alive past its last table."""
+        bad = [b for b in blocks if b not in self._refs]
+        if bad:
+            raise KVStoreError(f"cannot retain free blocks {bad}")
+        for b in blocks:
+            self._refs[b] += 1
+
+    def release(self, blocks: List[int]) -> int:
+        """Drop one external reference per block; returns how many blocks
+        actually returned to the pool."""
+        return sum(1 for b in blocks if self._decref(b))
+
     def free(self, rid: int) -> int:
-        """Release ``rid``'s blocks back to the pool; returns the number
-        of blocks freed (eviction = this, on the replica's store)."""
+        """Release ``rid``'s references; returns the number of blocks
+        *actually* freed back to the pool (shared blocks with surviving
+        referents don't count — eviction of a shared-prefix replica only
+        reclaims its unique suffix)."""
         if rid not in self.tables:
             raise KVStoreError(f"rid {rid} not resident in ledger")
         blocks = self.tables.pop(rid)
         fixed = self.fixed_block.pop(rid)
         if fixed is not None:
             blocks = [fixed] + blocks
-        # overflow ids (non-strict overcommit) evaporate; real ids return
-        self._free.extend(b for b in blocks if b < self.num_blocks)
         self._lines.pop(rid)
         self._synced.pop(rid)
-        return len(blocks)
+        self._shared_head.pop(rid, None)
+        return sum(1 for b in blocks if self._decref(b))

@@ -65,6 +65,14 @@ def _copy_entry(dst, src, dst_slot, src_slot):
     return dst.at[:, dst_slot].set(src[:, src_slot])
 
 
+# intra-store gather for prefix adoption: source rows live in *other*
+# slots' windows (one per shared block), so the row vector carries its
+# own per-row slot index; not donated — src and dst are the same buffer
+@jax.jit
+def _gather_rows(arr, dst_slot, src_slots, src_pos, dst_pos):
+    return arr.at[:, dst_slot, dst_pos].set(arr[:, src_slots, src_pos])
+
+
 class PagedStore:
     def __init__(self, cfg: ModelConfig, num_slots: int, kv_capacity: int,
                  block_lines: Optional[int] = None,
@@ -164,29 +172,84 @@ class PagedStore:
 
     # -- ledger ops (slot-affine) ----------------------------------------------
     def alloc(self, rid: int, slot: int, lines: int,
-              synced: Optional[int] = None) -> None:
+              synced: Optional[int] = None,
+              shared: Optional[List[int]] = None) -> None:
+        """Admit ``rid`` into ``slot``.  ``shared`` adopts a resident
+        prefix's blocks (anywhere in the pool) as the table head; the
+        slot's *own* region then backs only the suffix — but note the
+        physical contract: the dense window stays self-contained, so the
+        caller must also :meth:`copy_prefix` the shared rows into the
+        slot's window.  The slot's own blocks shadowed by the shared
+        head (logical positions ``[0, len(shared))``) hold those copied
+        rows and stay OFF the ledger — the ledger is the accounting
+        truth, and sharing is exactly the HBM it saves."""
         if slot in self.slot_rid:
             raise KVStoreError(f"slot {slot} already backs "
                                f"rid {self.slot_rid[slot]}")
-        self.ledger.alloc(rid, lines, block_ids=self.slot_block_ids(slot),
-                          synced=synced)
+        ids = self.slot_block_ids(slot)
+        off = 1 if self._has_fixed else 0
+        n_shared = len(shared) if shared else 0
+        if n_shared:
+            if n_shared * self.block_lines > min(lines, self.kv_capacity):
+                raise KVStoreError(
+                    f"rid {rid}: shared head {n_shared} blocks exceeds "
+                    f"{lines} lines (hits must be block-aligned)")
+            hint = ids[:off] + ids[off + n_shared:]
+        else:
+            hint = ids
+        self.ledger.alloc(rid, lines, block_ids=hint, synced=synced,
+                          shared=shared)
         self.slot_rid[slot] = rid
         self.rid_slot[rid] = slot
 
+    def _grow_hint(self, rid: int) -> List[int]:
+        """Free own-region blocks for the *next* logical positions of
+        ``rid`` — skipping the positions shadowed by a shared head, whose
+        own blocks hold the copied prefix rows and must never be handed
+        out as growth."""
+        slot = self.rid_slot[rid]
+        ids = self.slot_block_ids(slot)
+        off = 1 if self._has_fixed else 0
+        return ids[off + len(self.ledger.tables[rid]):]
+
     def append_line(self, rid: int, n: int = 1) -> int:
-        return self.ledger.append_line(
-            rid, n, block_ids=self.slot_block_ids(self.rid_slot[rid]))
+        out = self.ledger.append_line(rid, n,
+                                      block_ids=self._grow_hint(rid))
+        if self.ledger.last_cow is not None:
+            raise KVStoreError(
+                f"rid {rid}: copy-on-write inside the slot-affine store "
+                f"(shared heads must be block-aligned)")
+        return out
 
     def set_lines(self, rid: int, lines: int) -> int:
-        return self.ledger.set_lines(
-            rid, lines, block_ids=self.slot_block_ids(self.rid_slot[rid]))
+        cur = self.ledger.lines(rid)
+        if lines > cur:
+            return self.append_line(rid, lines - cur)
+        return self.ledger.set_lines(rid, lines)
 
     def free_slot(self, slot: int) -> int:
+        """Release the slot's request; returns blocks *actually* freed
+        (shared blocks survive under their other referents)."""
         rid = self.slot_rid.pop(slot, None)
         if rid is None:
             return 0
         self.rid_slot.pop(rid)
         return self.ledger.free(rid)
+
+    def slot_used_blocks(self, slot: int) -> List[int]:
+        """Own-region blocks still referenced (by a table or the prefix
+        cache) — a slot is reusable for fresh prefill only once this is
+        empty."""
+        return [b for b in self.slot_block_ids(slot)
+                if self.ledger.refcount(b) > 0]
+
+    def shared_head_lines(self, rid: int) -> int:
+        return self.ledger.shared_head_lines(rid)
+
+    def shared_saved_bytes(self) -> float:
+        """HBM the refcounted prefix sharing avoids allocating:
+        Σ (refs − 1) blocks at block granularity."""
+        return self.ledger.shared_saved_blocks() * self.ledger.block_bytes
 
     def lines(self, rid: int) -> int:
         return self.ledger.lines(rid)
@@ -293,3 +356,42 @@ class PagedStore:
             self.state["layers"][i][pj][key] = _copy_rows(
                 dst_arr, src_arr, d_slot, s_slot, pos)
         return self.costs.mirror_bytes(max(0, to_line - from_line))
+
+    # -- prefix adoption (one-time window fill) --------------------------------
+    def copy_prefix(self, blocks: List[int], dst_slot: int,
+                    n_lines: int) -> float:
+        """Materialise a shared prefix run into ``dst_slot``'s dense
+        window rows ``[0, n_lines)``.
+
+        The slot-affine layout keeps each window self-contained (the
+        layer scan reads its slot's rows directly), so adopting blocks
+        from other slots' regions is a one-time intra-HBM row gather —
+        data movement instead of prefill *compute*.  The ledger, not the
+        window, is the accounting truth: the adopted blocks stay shared
+        there and the shadowed own rows stay off-ledger.  Returns the
+        bytes gathered (reported separately from mirror/stream traffic;
+        never charged as prefill)."""
+        import numpy as np
+        n_lines = min(n_lines, self.kv_capacity,
+                      len(blocks) * self.block_lines)
+        if n_lines <= 0:
+            return 0.0
+        off = 1 if self._has_fixed else 0
+        src_slots = np.empty((n_lines,), np.int32)
+        src_pos = np.empty((n_lines,), np.int32)
+        for i in range(n_lines):
+            b = blocks[i // self.block_lines]
+            slot, k = divmod(b, self.blocks_per_slot)
+            src_slots[i] = slot
+            src_pos[i] = (k - off) * self.block_lines \
+                + i % self.block_lines
+        dst_pos = np.arange(n_lines, dtype=np.int32)
+        d_slot = jnp.int32(dst_slot)
+        for i, pj, key, kind in self._paths:
+            if kind != "line":
+                continue
+            arr = self.state["layers"][i][pj][key]
+            self.state["layers"][i][pj][key] = _gather_rows(
+                arr, d_slot, jnp.asarray(src_slots),
+                jnp.asarray(src_pos), jnp.asarray(dst_pos))
+        return self.costs.line_bytes * n_lines

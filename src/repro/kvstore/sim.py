@@ -12,7 +12,7 @@ the *costs* and the *ledger arithmetic* are shared with the live
 """
 from __future__ import annotations
 
-from typing import Mapping, Optional
+from typing import List, Mapping, Optional
 
 from repro.kvstore.base import BlockLedger, LineCosts
 
@@ -39,13 +39,17 @@ class SimStore:
 
     # -- reconciliation ------------------------------------------------------
     def reconcile(self, resident: Mapping[int, int],
-                  synced: Optional[Mapping[int, int]] = None):
+                  synced: Optional[Mapping[int, int]] = None,
+                  shared: Optional[Mapping[int, List[int]]] = None):
         """Make ledger membership and line counts match ``resident``
         (rid -> current KV lines).  ``synced`` optionally pins mirror
         marks; by default every entry is considered current (the
         simulator executes the mirror implicitly inside the decode-step
         cost, so a replica is never more than in-flight-one-step
-        behind)."""
+        behind).  ``shared`` maps rids to prefix-cache block runs adopted
+        as their table heads — alloc/free stay symmetric on the
+        refcounts, so a prefix-hit request prices exactly its unique
+        suffix here just as it does on the live store."""
         led = self.ledger
         for rid in list(led.tables):
             if rid not in resident:
@@ -54,7 +58,8 @@ class SimStore:
             if rid in led.tables:
                 led.set_lines(rid, lines)
             else:
-                led.alloc(rid, lines)
+                led.alloc(rid, lines,
+                          shared=(shared or {}).get(rid))
             led.mark_synced(rid, None if synced is None
                             else synced.get(rid))
         return self

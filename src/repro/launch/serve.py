@@ -26,7 +26,8 @@ from repro.configs import list_archs
 from repro.fleet import PoissonFailures, load_fleet_trace
 from repro.scheduling.registry import policy_names
 from repro.workloads import (SLO, TABLE2, Batch, Bursty, ClosedLoop,
-                             DiurnalRamp, Poisson, TableLengths, WorkloadSpec)
+                             DiurnalRamp, Poisson, PrefixReuse, TableLengths,
+                             WorkloadSpec)
 
 
 def build_arrival(args):
@@ -102,6 +103,19 @@ def main():
     ap.add_argument("--fleet-trace", default=None,
                     help="JSONL fleet trace to replay "
                          "(repro.fleet.save_fleet_trace)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted radix prefix cache on every engine: "
+                         "shared prompt heads prefill once and dedup in HBM")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=None,
+                    help="cache retention cap in pool blocks "
+                         "(default: half of each engine's block pool)")
+    ap.add_argument("--prefix-reuse", type=float, default=0.0,
+                    help="probability a request shares a pooled prompt "
+                         "prefix (enables prefix-reuse traffic when > 0)")
+    ap.add_argument("--prefix-pool", type=int, default=4,
+                    help="number of shared prefix groups (system prompts)")
+    ap.add_argument("--prefix-len", type=int, default=64,
+                    help="declared shared-prefix length in tokens")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=2000)
     ap.add_argument("--no-redundancy", action="store_true")
@@ -109,10 +123,13 @@ def main():
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
 
+    reuse = (PrefixReuse(pool=args.prefix_pool, reuse=args.prefix_reuse,
+                         prefix_len=args.prefix_len)
+             if args.prefix_reuse > 0 else None)
     traffic = WorkloadSpec(
         arrival=build_arrival(args),
         lengths=TableLengths(args.workload, scale=args.scale),
-        name=args.workload)
+        name=args.workload, prefix_reuse=reuse)
     slo = None
     if args.slo_ttft is not None or args.slo_tbt is not None:
         slo = SLO(ttft=args.slo_ttft if args.slo_ttft is not None
@@ -123,11 +140,14 @@ def main():
         arch=args.arch, policy=args.policy, n_instances=args.instances,
         num_slots=args.slots, kv_capacity=args.kv_capacity,
         block_lines=args.block_lines, fuse_decode_steps=args.fuse_steps,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_blocks=args.prefix_cache_blocks,
         redundancy=not args.no_redundancy, reduced=not args.full_config,
         seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo,
         fleet=build_fleet(args))
     print(f"serving {args.arch} on {args.instances} instances "
-          f"with policy={args.policy}, redundancy={spec.redundancy}")
+          f"with policy={args.policy}, redundancy={spec.redundancy}"
+          + (", prefix_cache=on" if args.prefix_cache else ""))
     print(traffic.describe())
     report = serve(spec)
     print(report.describe())

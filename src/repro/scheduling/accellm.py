@@ -145,14 +145,24 @@ class AcceLLMScheduler(SchedulerPolicy):
                 and pair[rep].can_hold_replica(req, resident=(rep == side)):
             replica = pair[rep].index
 
+        def _hit(view) -> int:
+            # lines the destination's prefix cache already holds never
+            # cross the wire: the stream (and its pricing on both
+            # backends) covers only the unique suffix.  getattr: bare
+            # test doubles predate the prefix-cache view fields.
+            peek = getattr(view, "prefix_hit_tokens", None)
+            return peek(req) if peek is not None else 0
+
         actions: List[Action] = []
         if dst != side:
             actions.append(StreamState(req.rid, src=pair[side].index,
                                        dst=pair[dst].index,
-                                       retain_replica=replica is not None))
+                                       retain_replica=replica is not None,
+                                       skip_lines=_hit(pair[dst])))
         elif replica is not None:
             actions.append(StreamState(req.rid, src=pair[side].index,
-                                       dst=replica, as_replica=True))
+                                       dst=replica, as_replica=True,
+                                       skip_lines=_hit(pair[rep])))
         self._note("place", req.rid, pair[dst].index, replica)
         return actions
 

@@ -53,6 +53,10 @@ class StreamState:
     dst: int
     as_replica: bool = False
     retain_replica: bool = False
+    #: head lines already resident in ``dst``'s prefix cache: the stream
+    #: (and its pricing) covers only the unique suffix — a shared-prefix
+    #: replica costs almost no extra transfer or HBM
+    skip_lines: int = 0
 
 
 @dataclass(frozen=True)

@@ -108,11 +108,13 @@ class LiveInstanceView:
                 + len(self._c._chunking[self._index]))
 
     def prefill_backlog_tokens(self) -> int:
-        # planner feedback: chunk cursors shrink the remaining backlog
+        # planner feedback: chunk cursors shrink the remaining backlog,
+        # and a stamped prefix-cache hit starts the count past the hit
         planner = self._c.planner
-        return (sum(req.prompt_len
+        return (sum(req.prompt_len - (req.prefix_hit or 0)
                     for req, _ in self._c._pending[self._index])
-                + sum(req.prompt_len - planner.cursor(req.rid)
+                + sum(req.prompt_len - max(planner.cursor(req.rid),
+                                           req.prefix_hit or 0)
                       for req in self._c._chunking[self._index]))
 
     def decode_weights(self) -> Dict[int, float]:
@@ -141,6 +143,19 @@ class LiveInstanceView:
         store = self._eng.store
         return {store.slot_rid[s]: store.synced_line(store.slot_rid[s])
                 for s in self._eng.replica_of}
+
+    # -- prefix cache ---------------------------------------------------------
+    def shared_blocks(self) -> int:
+        return self._eng.store.ledger.shared_blocks_count()
+
+    def prefix_hit_tokens(self, req) -> int:
+        eng = self._eng
+        if eng.prefix_cache is None:
+            return 0
+        key = eng._prefix_key(req)
+        if not key:
+            return 0
+        return len(eng.prefix_cache.peek_blocks(key)) * eng.store.block_lines
 
 
 class LiveClusterView:
@@ -173,6 +188,8 @@ class LiveCluster:
                  temperature: float = 0.0, eos_token: Optional[int] = None,
                  block_lines: Optional[int] = None,
                  fuse_decode_steps: int = 1,
+                 prefix_cache: bool = False,
+                 prefix_cache_blocks: Optional[int] = None,
                  fleet: Optional["FleetController"] = None):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
@@ -187,11 +204,14 @@ class LiveCluster:
         self._engine_kwargs = dict(
             num_slots=num_slots, kv_capacity=kv_capacity,
             temperature=temperature, eos_token=eos_token,
-            block_lines=block_lines)
+            block_lines=block_lines, prefix_cache=prefix_cache,
+            prefix_cache_blocks=prefix_cache_blocks)
         self.engines = [
             InstanceEngine(cfg, params, num_slots, kv_capacity,
                            instance_id=i, temperature=temperature,
-                           eos_token=eos_token, block_lines=block_lines)
+                           eos_token=eos_token, block_lines=block_lines,
+                           prefix_cache=prefix_cache,
+                           prefix_cache_blocks=prefix_cache_blocks)
             for i in range(n_instances)
         ]
         #: fleet state per instance index (repro.fleet); dead engines
@@ -241,7 +261,9 @@ class LiveCluster:
         self.stats = {"prefills": 0, "decode_steps": 0, "rebalances": 0,
                       "replica_promotions": 0, "replica_evictions": 0,
                       "mirror_syncs": 0, "mirror_bytes": 0.0,
-                      "stream_bytes": 0.0, "evicted_blocks": 0}
+                      "stream_bytes": 0.0, "evicted_blocks": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "stream_skipped_lines": 0}
 
     @property
     def now(self) -> float:
@@ -354,12 +376,30 @@ class LiveCluster:
                         if not self._pending[idx]:
                             break
                         req, extra = self._pending[idx][0]
-                        if not eng.free_slots():
+                        # everyone admitted this iteration takes a slot
+                        # at execution, so capacity is free MINUS the
+                        # batch so far — a prefix-cache pin can also
+                        # wall off a slot region mid-loop, so re-count
+                        # every admission rather than trusting n
+                        taken = len(taken_now.get(idx, ()))
+                        if len(eng.free_slots()) <= taken:
                             for act in self.policy.evict(
                                     view, [view.instances()[idx]]):
                                 self._apply(act)
-                        if not eng.free_slots():
+                        if len(eng.free_slots()) <= taken:
                             break
+                        hit = 0
+                        if eng.prefix_cache is not None:
+                            hit = eng.prefix_stamp(req)
+                            if hit and len(eng.free_slots()) <= taken:
+                                # the pin froze the last free slot's
+                                # region: admit without the hit instead
+                                # of overcommitting the batch
+                                eng.prefix_abandon(req)
+                                hit = 0
+                        if hit:
+                            self.stats["prefix_hits"] += 1
+                            self.stats["prefix_hit_tokens"] += hit
                         self._pending[idx].pop(0)
                         taken_now.setdefault(idx, []).append((req, extra))
                         self._extras[req.rid] = extra
@@ -454,7 +494,13 @@ class LiveCluster:
         if self.policy.requeue_unplaced:
             stranded = [item for pending in self._pending for item in pending]
             if stranded:
-                for pending in self._pending:
+                # a stamped hit is instance-local: releasing the backlog
+                # for re-routing must drop the pin (it re-stamps wherever
+                # it lands next iteration)
+                for idx, pending in enumerate(self._pending):
+                    for req, _ in pending:
+                        if req.prefix_hit is not None:
+                            self.engines[idx].prefix_abandon(req)
                     pending.clear()
                 self.queue[:0] = stranded
 
@@ -552,12 +598,21 @@ class LiveCluster:
             reset_for_reprefill(req)
             requeued.append((req, self._extras.pop(req.rid, req.extra)))
         self._chunking[instance] = []
+        # a stamped hit referred to the dead instance's cache; the
+        # re-prefill starts clean and re-stamps wherever it lands
+        for req, _ in requeued:
+            if req.prefix_hit is not None:
+                dead.prefix_abandon(req)
         self.queue[:0] = requeued
         # 6. teardown: free every slot; the dead engine object stays in
-        # the list so instance indices remain stable
+        # the list so instance indices remain stable.  The prefix cache
+        # dies with the HBM it indexed — a rejoin at this rank starts
+        # cold.
         for slot in (list(dead.slot_req) + list(dead.replica_of)
                      + list(dead.prefilling)):
             dead.release(slot)
+        if dead.prefix_cache is not None:
+            dead.prefix_cache.release_all()
         self.alive[instance] = False
         self.draining[instance] = False
 
@@ -709,7 +764,13 @@ class LiveCluster:
             else:
                 src.release(src_slot)
             pl.primary = (act.dst, dst_slot)
-        self.stats["stream_bytes"] += src.store.costs.bytes_at(lines)
+        # head lines already resident in dst's prefix cache are adopted,
+        # not moved: charge only the unique suffix (planner prices the
+        # same subtraction via StreamState.skip_lines)
+        skip = min(lines, dst.store.shared_head_lines(act.rid))
+        self.stats["stream_skipped_lines"] += skip
+        self.stats["stream_bytes"] += (src.store.costs.bytes_at(lines)
+                                       - skip * src.store.costs.line_bytes)
 
     def _apply_mirror(self, act: MirrorSync):
         pl = self.placements.get(act.rid)

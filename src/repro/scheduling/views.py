@@ -143,6 +143,21 @@ class InstanceView(Protocol):
         been mirrored (the ``from_line`` of a delta MirrorSync)."""
         ...
 
+    # -- prefix cache ---------------------------------------------------------
+    def shared_blocks(self) -> int:
+        """Distinct pool blocks referenced by more than one holder
+        (tables and/or the prefix cache) on this instance — each one is
+        HBM the refcounted sharing avoided duplicating."""
+        ...
+
+    def prefix_hit_tokens(self, req: RequestView) -> int:
+        """Block-aligned prompt-head tokens of ``req`` resident in this
+        instance's prefix cache right now (0 without a cache).  A pure
+        peek: no LRU touch, no pin — policies use it to pick placements
+        (e.g. a replica destination whose cache already holds the
+        prefix) before the executor stamps the real hit."""
+        ...
+
 
 def usable(view: InstanceView) -> bool:
     """May new work land on this instance?  The single aliveness gate

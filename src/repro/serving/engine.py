@@ -53,7 +53,9 @@ class InstanceEngine:
                  kv_capacity: int, instance_id: int = 0,
                  temperature: float = 0.0, eos_token: Optional[int] = None,
                  seed: int = 0, block_lines: Optional[int] = None,
-                 paged_decode: Optional[bool] = None):
+                 paged_decode: Optional[bool] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -99,6 +101,18 @@ class InstanceEngine:
         #: compacted to active primary slots (vs the dense full-window,
         #: full-batch oracle path)
         self.use_paged_decode = paged_decode and self.supports_paged_decode
+        #: radix prefix cache over the store's ledger (suffix-only
+        #: prefill rides the chunk path, so attention-only stacks only)
+        self.prefix_cache = None
+        if prefix_cache and self.supports_chunked_prefill:
+            from repro.prefixcache import PrefixCache
+            if prefix_cache_blocks is None:
+                prefix_cache_blocks = (num_slots
+                                       * self.store.line_blocks_per_slot) // 2
+            self.prefix_cache = PrefixCache(
+                self.store.ledger, capacity_blocks=prefix_cache_blocks)
+        #: pinned hit runs awaiting their prefill's first chunk
+        self._hit_runs: Dict[int, List[int]] = {}
         # fused multi-step decode: compiles per (batch, table, steps)
         # shape; eos/temperature are baked in as compile-time constants
         self._jit_decode_multi = jax.jit(
@@ -132,9 +146,26 @@ class InstanceEngine:
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
+        """Slots usable for a fresh admission: unoccupied AND with an
+        allocatable own block region.  A released slot whose blocks live
+        on under the prefix cache still counts (``_clean_slot`` evicts
+        those entries on take); one kept alive by another table's shared
+        reference does not — its rows are live data."""
         used = (set(self.slot_req) | set(self.replica_of)
                 | set(self.prefilling))
-        return [s for s in range(self.num_slots) if s not in used]
+        out = []
+        cached = (set(self.prefix_cache.index.blocks())
+                  if self.prefix_cache is not None else set())
+        pinned = (self.prefix_cache.pinned()
+                  if self.prefix_cache is not None else set())
+        for s in range(self.num_slots):
+            if s in used:
+                continue
+            held = self.store.slot_used_blocks(s)
+            if all(self.store.ledger.refcount(b) == 1 and b in cached
+                   and b not in pinned for b in held):
+                out.append(s)
+        return out
 
     def active_slots(self) -> List[int]:
         return sorted(self.slot_req)
@@ -169,6 +200,67 @@ class InstanceEngine:
 
     def _rid_at(self, slot: int) -> int:
         return self.store.slot_rid[slot]
+
+    # -- prefix cache ----------------------------------------------------------
+    def _prefix_key(self, req: Request) -> List[int]:
+        """Radix key for ``req``'s shareable prompt head: real token ids,
+        trimmed to the block-aligned usable hit length.  Empty when the
+        request declares no sharing (the index only ever sees declared
+        prefixes, exactly like the token-free simulator's)."""
+        if (self.prefix_cache is None or req.prefix_id is None
+                or req.extra or req.prompt_tokens is None):
+            return []
+        from repro.prefixcache import aligned_hit_lines
+        n = aligned_hit_lines(req.prefix_len, req.prompt_len,
+                              self.store.block_lines)
+        if n <= 0:
+            return []
+        return [int(t) for t in np.asarray(req.prompt_tokens)[0, :n]]
+
+    def prefix_stamp(self, req: Request) -> int:
+        """Consult the index once, when the prefill is first scheduled:
+        stamps ``req.prefix_hit`` (the planner prices the suffix from it)
+        and pins the hit run so eviction cannot release it before the
+        first chunk adopts it.  Idempotent across re-planning."""
+        if req.prefix_hit is not None:
+            return req.prefix_hit
+        key = self._prefix_key(req)
+        blocks = (self.prefix_cache.lookup_pin(req.rid, key)
+                  if key else [])
+        if blocks:
+            self._hit_runs[req.rid] = blocks
+        req.prefix_hit = len(blocks) * self.store.block_lines
+        return req.prefix_hit
+
+    def prefix_abandon(self, req: Request):
+        """The stamped prefill will not run here after all (requeued or
+        its instance died): drop the pin and the stamp so the next
+        placement consults its own instance's cache."""
+        self._hit_runs.pop(req.rid, None)
+        if self.prefix_cache is not None:
+            self.prefix_cache.unpin(req.rid)
+        req.prefix_hit = None
+
+    def _prefix_insert(self, req: Request):
+        """Index the just-prefilled request's shareable head (its table's
+        leading blocks gain a cache reference)."""
+        key = self._prefix_key(req)
+        if not key:
+            return
+        k = len(key) // self.store.block_lines
+        self.prefix_cache.insert(key, self.store.ledger.tables[req.rid][:k])
+
+    def _clean_slot(self, slot: int) -> int:
+        """Make ``slot``'s own block region allocatable, evicting cache
+        entries that are its only remaining referents."""
+        used = self.store.slot_used_blocks(slot)
+        if used:
+            assert self.prefix_cache is not None, \
+                f"slot {slot} region held with no cache to evict"
+            self.prefix_cache.evict_obstructing(set(used))
+            assert not self.store.slot_used_blocks(slot), \
+                f"slot {slot} region still referenced after cache purge"
+        return slot
 
     # -- prefill --------------------------------------------------------------
     def prefill_request(self, req: Request, extra: Optional[dict] = None
@@ -233,7 +325,7 @@ class InstanceEngine:
     def _take_slot(self) -> int:
         free = self.free_slots()
         assert free, f"instance {self.instance_id} has no free slot"
-        return free[0]
+        return self._clean_slot(free[0])
 
     def _finish_prefill(self, req: Request, slot: int, tok: int,
                         ledgered: bool = False):
@@ -248,6 +340,8 @@ class InstanceEngine:
             self.store.set_lines(req.rid, req.total_len)
         else:
             self.store.alloc(req.rid, slot, lines=req.total_len)
+        if self.prefix_cache is not None:
+            self._prefix_insert(req)
 
     def _prefill_single(self, req: Request, extra: Optional[dict]) -> int:
         """Unpadded single-prompt path (modality extras, recurrent or
@@ -278,6 +372,8 @@ class InstanceEngine:
         assert len(slots) >= len(items), \
             f"instance {self.instance_id}: {len(items)} prefills, " \
             f"{len(slots)} free slots"
+        for s in slots[:len(items)]:
+            self._clean_slot(s)
         B = len(items)
         Bp = bucket_len(B, floor=1)
         toks = np.zeros((Bp, bucket), np.int32)
@@ -318,11 +414,27 @@ class InstanceEngine:
             raise NotImplementedError(
                 f"chunked prefill of a {req.prompt_len}-token prompt "
                 f"would wrap the {self.kv_capacity}-line cache window")
-        if it.start == 0:
+        if req.rid not in self.store.rid_slot:
+            # first chunk: admit the request.  A prefix-cache hit adopts
+            # the cached run as the table head (ledger: suffix blocks
+            # only) and gathers the hit rows into this slot's window
+            # once — the chunk below then resumes *past* the hit, never
+            # recomputing it.
             slot = self._take_slot()
             self.prefilling[slot] = req
             req.phase = Phase.PREFILL
-            self.store.alloc(req.rid, slot, lines=0)
+            hit = int(req.prefix_hit or 0)
+            run = self._hit_runs.pop(req.rid, None)
+            if hit:
+                assert run is not None, \
+                    f"rid {req.rid}: stamped hit {hit} lost its run"
+                assert it.start == hit, (it.start, hit)
+                self.store.alloc(req.rid, slot, lines=hit, shared=run)
+                self.store.copy_prefix(run, slot, hit)
+                self.prefix_cache.unpin(req.rid)
+                self.lengths[slot] = hit
+            else:
+                self.store.alloc(req.rid, slot, lines=0)
         else:
             slot = self.store.rid_slot[req.rid]
             assert self.prefilling.get(slot) is req
@@ -498,6 +610,7 @@ class InstanceEngine:
     def import_slot(self, slot: int, exported, req: Request,
                     as_replica_of: Optional[Tuple[int, int]] = None):
         sub_state, length, last_tok, lines = exported
+        self._clean_slot(slot)
         self.store.alloc(req.rid, slot, lines=lines)
         self.store.merge_slot(slot, sub_state)
         self._install(slot, length, last_tok, req, as_replica_of)
@@ -505,8 +618,17 @@ class InstanceEngine:
     def import_stream(self, slot: int, chunks: Iterable, length: int,
                       last_tok: int, lines: int, req: Request,
                       as_replica_of: Optional[Tuple[int, int]] = None):
-        """Install a per-layer streamed export chunk by chunk."""
-        self.store.alloc(req.rid, slot, lines=lines)
+        """Install a per-layer streamed export chunk by chunk.  When this
+        instance's prefix cache already holds the request's prompt head,
+        the new table adopts those blocks — a shared-prefix replica costs
+        only its unique suffix in pool blocks (the redundancy interplay
+        the paper's HBM argument rides on)."""
+        self._clean_slot(slot)
+        run = None
+        if self.prefix_cache is not None:
+            key = self._prefix_key(req)
+            run = self.prefix_cache.peek_blocks(key) if key else None
+        self.store.alloc(req.rid, slot, lines=lines, shared=run or None)
         for path, chunk in chunks:
             self.store.import_chunk(slot, path, chunk)
         self._install(slot, length, last_tok, req, as_replica_of)
@@ -550,6 +672,11 @@ class InstanceEngine:
             to_line = src.store.lines(rid)
         if from_line is None:
             from_line = self.store.synced_line(rid)
+        # lines inside an adopted shared head are already resident here:
+        # a catch-up sync never re-moves them (ISSUE: MirrorSync skips
+        # blocks the mirror holds)
+        from_line = max(from_line, self.store.shared_head_lines(rid))
+        to_line = max(to_line, from_line)
         moved = self.store.copy_lines(src.store, src_slot, dst_slot,
                                       from_line, to_line)
         self.lengths[dst_slot] = src.lengths[src_slot]

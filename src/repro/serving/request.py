@@ -24,6 +24,15 @@ class Request:
     rid: int = field(default_factory=lambda: next(_ids))
     prompt_tokens: Optional[object] = None      # jax array (1, prompt_len)
     extra: Optional[dict] = None                # modality payload (vision/audio)
+    #: shared-prefix identity from the workload layer: requests with the
+    #: same prefix_id open with the same first prefix_len tokens (system
+    #: prompt / conversation history).  None = no declared sharing.
+    prefix_id: Optional[int] = None
+    prefix_len: int = 0
+    #: block-aligned prefix-cache hit, stamped once when the prefill is
+    #: first scheduled (both backends stamp at action creation so the
+    #: planner prices the same suffix); None = not yet consulted
+    prefix_hit: Optional[int] = None
     phase: Phase = Phase.QUEUED
     generated: int = 0
     output_tokens: List[int] = field(default_factory=list)

@@ -54,12 +54,28 @@ class SimInstance:
     #: block-table accounting ledger (repro.kvstore) — the same
     #: arithmetic the live PagedStore runs; (re)built in __post_init__
     store: Optional[SimStore] = None
+    #: radix prefix cache over the ledger (None: disabled).  The SAME
+    #: ``repro.prefixcache.PrefixCache`` class the live engine runs —
+    #: only the token alphabet differs (``(prefix_id, pos)`` pairs here)
+    prefix_cache: Optional[object] = None
+    #: rid -> cached block run its ledger table adopts as a shared head
+    #: on (re)alloc; pruned to resident rids at each reconcile
+    shared_runs: Dict[int, List[int]] = field(default_factory=dict)
+    #: pinned hit runs awaiting their prefill's completion
+    hit_runs: Dict[int, List[int]] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.store is None:
             self.store = SimStore(self.perf.line_costs,
                                   self.perf.kv_capacity_bytes,
                                   block_lines=self.block_lines)
+
+    def enable_prefix_cache(self, capacity_blocks: Optional[int] = None):
+        from repro.prefixcache import PrefixCache
+        if capacity_blocks is None:
+            capacity_blocks = self.store.ledger.num_blocks // 2
+        self.prefix_cache = PrefixCache(self.store.ledger,
+                                        capacity_blocks=capacity_blocks)
 
     def synced_store(self) -> SimStore:
         """The ledger, reconciled to the current resident sets.  The
@@ -70,7 +86,14 @@ class SimInstance:
         resident = {rid: r.total_len for rid, r in self.decode_batch.items()}
         for rid, r in self.replicas.items():
             resident.setdefault(rid, r.total_len)
-        return self.store.reconcile(resident)
+        if self.shared_runs:
+            # a request that left residency re-stamps (and re-adopts)
+            # fresh if it ever returns — stale runs must not leak into
+            # a later realloc of the same rid
+            for rid in list(self.shared_runs):
+                if rid not in resident:
+                    del self.shared_runs[rid]
+        return self.store.reconcile(resident, shared=self.shared_runs)
 
     def state_bytes(self) -> float:
         # direct line-exact sum (== the ledger's used_bytes, same
@@ -134,15 +157,22 @@ class Policy:
 
 class Simulator:
     def __init__(self, policy: Policy, perf: PerfModel, n_instances: int,
-                 max_batch: int = 64, block_lines: int = 16):
+                 max_batch: int = 64, block_lines: int = 16,
+                 prefix_cache: bool = False,
+                 prefix_cache_blocks: Optional[int] = None):
         self.perf = perf
         # remembered so fleet joins build replacement instances with the
         # original shape (mirrors LiveCluster._engine_kwargs)
         self.max_batch = max_batch
         self.block_lines = block_lines
+        self.prefix_cache = prefix_cache
+        self.prefix_cache_blocks = prefix_cache_blocks
         self.fleet = None            # FleetController of the active run
         self.instances = [SimInstance(i, perf, max_batch, block_lines)
                           for i in range(n_instances)]
+        if prefix_cache:
+            for inst in self.instances:
+                inst.enable_prefix_cache(prefix_cache_blocks)
         self.policy = policy
         policy.bind(self)
         self.clock = ModeledSecondsClock()
@@ -275,6 +305,7 @@ class Simulator:
                     reset_for_reprefill(req)
             else:
                 reset_for_reprefill(req)
+            req.prefix_hit = None    # re-stamps wherever it re-routes
             self.push(self.now, "arrival", req)
             return
         inst.decode_batch[req.rid] = req

@@ -149,11 +149,20 @@ class Planner:
         return plans
 
     # -- chunking (resumable cursors) -----------------------------------------
+    @staticmethod
+    def _hit(act: "Prefill") -> int:
+        """Prefix-cache hit stamped on the request at action creation:
+        the prefill starts past it — chunk cursors are seeded there and
+        whole-prompt items price only the suffix.  Both backends stamp
+        before compile, so plans (and golden traces) agree."""
+        return int(getattr(act.req, "prefix_hit", 0) or 0)
+
     def _plan_items(self, acts: Sequence["Prefill"]) -> List[PrefillItem]:
         items: List[PrefillItem] = []
         if self.chunk_tokens is None:
             for act in acts:
-                items.append(PrefillItem(act.rid, act.prompt_len, 0,
+                items.append(PrefillItem(act.rid, act.prompt_len,
+                                         self._hit(act),
                                          act.prompt_len, req=act.req))
             return items
         budget = self.chunk_tokens
@@ -163,14 +172,15 @@ class Planner:
             if not self.chunk_execution:
                 # whole-prompt throttle: always admit the first prompt
                 # (so oversized prompts cannot starve), further ones
-                # only while the budget lasts
+                # only while the budget lasts (engines without chunk
+                # resume have no prefix cache either: start stays 0)
                 if items and act.prompt_len > budget:
                     break
                 items.append(PrefillItem(act.rid, act.prompt_len, 0,
                                          act.prompt_len, req=act.req))
                 budget -= act.prompt_len
                 continue
-            cur = self._cursors.get(act.rid, 0)
+            cur = self._cursors.get(act.rid, self._hit(act))
             take = min(max(act.prompt_len - cur, 0), budget)
             if take <= 0 and cur >= act.prompt_len:
                 continue
@@ -243,6 +253,10 @@ class Planner:
                                               PromoteReplica, StreamState)
         if isinstance(act, StreamState):
             lines = view.instances()[act.src].request_lines().get(act.rid, 0)
+            # lines already resident in the destination's prefix cache
+            # don't move: a shared-prefix replica streams its unique
+            # suffix only
+            lines = max(0, lines - getattr(act, "skip_lines", 0))
             return TransferPlan(act.src, act, lines=lines,
                                 overlap_layers=True)
         if isinstance(act, MirrorSync):

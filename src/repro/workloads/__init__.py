@@ -18,8 +18,9 @@ from repro.workloads.lengths import (TABLE2, LengthModel, LognormalLengths,
 from repro.workloads.metrics import (SLO, SLOSummary, TimelinePoint,
                                      queue_depth_stats, slo_summary,
                                      utilization)
-from repro.workloads.spec import (RequestSource, WorkloadSpec, default_extras,
-                                  load_trace, save_trace, table2_spec)
+from repro.workloads.spec import (PrefixReuse, RequestSource, WorkloadSpec,
+                                  default_extras, load_trace, save_trace,
+                                  table2_spec)
 
 __all__ = [
     "ArrivalProcess", "Batch", "Poisson", "Bursty", "DiurnalRamp",
@@ -29,6 +30,6 @@ __all__ = [
     "Clock", "IterationClock", "ModeledSecondsClock",
     "SLO", "SLOSummary", "TimelinePoint", "slo_summary", "utilization",
     "queue_depth_stats",
-    "WorkloadSpec", "RequestSource", "default_extras", "save_trace",
-    "load_trace", "table2_spec",
+    "WorkloadSpec", "RequestSource", "PrefixReuse", "default_extras",
+    "save_trace", "load_trace", "table2_spec",
 ]

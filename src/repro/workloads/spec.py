@@ -49,12 +49,44 @@ def default_extras(cfg, key, i: int) -> Optional[dict]:
 
 
 @dataclass(frozen=True)
+class PrefixReuse:
+    """Shared-prefix traffic shape (system prompts / multi-turn reuse).
+
+    With probability ``reuse`` a request draws one of ``pool`` prefix
+    groups and its prompt head repeats that group's tokens — the
+    substrate the prefix cache dedups.  ``growth`` lines are added to a
+    group's declared prefix each time it is drawn (conversation history
+    accreting onto a shared system prompt), capped at ``max_prefix``
+    (default: ``prefix_len``, i.e. no growth).  Declared prefixes are
+    always clamped below the request's prompt length.
+
+    Group tokens are generated ONCE per group at ``max_prefix`` length
+    from the stream key alone, and reuse draws happen AFTER the length
+    draws — so the same (spec, seed) yields bit-identical prompts and
+    lengths whether or not a backend's cache is enabled, and
+    cache-on/cache-off runs are token-comparable by construction.
+    """
+    pool: int = 4
+    reuse: float = 0.5
+    prefix_len: int = 64
+    growth: int = 0
+    max_prefix: Optional[int] = None
+
+    @property
+    def cap(self) -> int:
+        return self.max_prefix if self.max_prefix is not None \
+            else self.prefix_len
+
+
+@dataclass(frozen=True)
 class WorkloadSpec:
     """Everything that defines the traffic, nothing about the backend."""
     arrival: ArrivalProcess
     lengths: LengthModel
     extras_fn: Optional[ExtrasFn] = None
     name: str = ""
+    #: shared-prefix reuse shape (None: every prompt is unique)
+    prefix_reuse: Optional[PrefixReuse] = None
 
     def source(self, seed: int = 0, cfg=None) -> "RequestSource":
         """A fresh deterministic request stream.  Pass the model ``cfg``
@@ -94,14 +126,41 @@ class RequestSource:
         if self.cfg is not None:
             import jax
             key = jax.random.PRNGKey(self.seed)
+        pr = self.spec.prefix_reuse
+        # per-group declared prefix length (grows by pr.growth per draw)
+        psize: dict = {}
+        gtoks: dict = {}
         for i, t in enumerate(self.spec.arrival.times(rng)):
             plen, dlen = self.spec.lengths.sample(rng, i)
             req = Request(prompt_len=plen, max_new_tokens=dlen,
                           arrival=float(t), rid=i)
+            if pr is not None and pr.pool > 0:
+                # drawn AFTER lengths, unconditionally — the stream stays
+                # bit-identical for every consumer of this spec+seed
+                hit_draw = rng.random()
+                g = int(rng.integers(pr.pool))
+                if hit_draw < pr.reuse:
+                    cur = psize.setdefault(g, pr.prefix_len)
+                    req.prefix_id = g
+                    req.prefix_len = min(cur, plen)
+                    psize[g] = min(cur + pr.growth, pr.cap)
             if self.cfg is not None:
                 req.prompt_tokens = jax.random.randint(
                     jax.random.fold_in(key, i), (1, plen), 0,
                     self.cfg.vocab_size)
+                if req.prefix_id is not None and req.prefix_len > 0:
+                    # group tokens are a fixed max-length sequence drawn
+                    # from the stream key alone: every member of the
+                    # group shares the same prompt head, regardless of
+                    # draw order or per-request prefix length
+                    if req.prefix_id not in gtoks:
+                        gtoks[req.prefix_id] = jax.random.randint(
+                            jax.random.fold_in(key,
+                                               (1 << 20) + req.prefix_id),
+                            (1, pr.cap), 0, self.cfg.vocab_size)
+                    n = req.prefix_len
+                    req.prompt_tokens = req.prompt_tokens.at[0, :n].set(
+                        gtoks[req.prefix_id][0, :n])
                 extras = self.spec.extras_fn or default_extras
                 req.extra = extras(self.cfg, key, i)
             yield req

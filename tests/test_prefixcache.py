@@ -1,0 +1,551 @@
+"""Prefix cache subsystem: refcounted COW blocks + the radix index.
+
+The acceptance bars:
+
+* ``BlockLedger.free``/``release`` return blocks *actually* released —
+  evicting a shared-prefix request reclaims only its unique suffix,
+* random interleavings of alloc/share/append/COW/free/insert/evict never
+  leak or double-free a block (property: per-block refcounts always
+  equal table references + cache references),
+* golden lockstep trace: the shared AcceLLM kernel makes identical
+  decisions AND the per-instance prefix caches record identical
+  hit accounting on the live executor and the simulator adapter,
+* under prefix-heavy traffic the live cluster's generated tokens are
+  bit-identical with the cache on and off.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kvstore import BlockLedger, KVStoreError, LineCosts
+from repro.models import init_params
+from repro.prefixcache import (PrefixCache, PrefixIndex, aligned_hit_lines,
+                               chunk_key)
+from repro.scheduling import AcceLLMScheduler, LiveCluster
+from repro.serving import Request
+from repro.sim import H100, InstanceSpec, PerfModel, Simulator
+from repro.sim.policies import AcceLLMPolicy
+from repro.sim.workload import SimRequest
+from repro.workloads import (Batch, Poisson, PrefixReuse, UniformLengths,
+                             WorkloadSpec)
+from tests._propcheck import given, settings, st
+
+BL = 4  # block_lines for the pure-ledger tests
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _ledger(num_blocks=32, fixed=0):
+    return BlockLedger(LineCosts(8.0, fixed, 0), num_blocks, BL)
+
+
+# ---------------------------------------------------------------------------
+# alignment rule
+# ---------------------------------------------------------------------------
+
+
+def test_aligned_hit_lines():
+    # block-aligned and strictly inside the prompt
+    assert aligned_hit_lines(8, 20, BL) == 8
+    assert aligned_hit_lines(8, 8, BL) == 4     # full-prompt hit forbidden
+    assert aligned_hit_lines(7, 20, BL) == 4    # rounds down to blocks
+    assert aligned_hit_lines(3, 20, BL) == 0
+    assert aligned_hit_lines(0, 20, BL) == 0
+    assert aligned_hit_lines(100, 1, BL) == 0   # one-token prompt: no hit
+
+
+# ---------------------------------------------------------------------------
+# radix index
+# ---------------------------------------------------------------------------
+
+
+def test_index_walk_extend_subtree():
+    idx = PrefixIndex(BL)
+    toks = list(range(12))
+    created = idx.extend(toks, [10, 11, 12])
+    assert [n.block for n in created] == [10, 11, 12]
+    assert len(idx) == 3
+    # longest-match walk, block-granular
+    assert [n.block for n in idx.walk(toks)] == [10, 11, 12]
+    assert [n.block for n in idx.walk(toks[:7])] == [10]
+    assert idx.walk([99] * 8) == []
+    # divergent suffix shares the common head node
+    other = toks[:4] + [50, 51, 52, 53]
+    created = idx.extend(other, [10, 33])
+    assert [n.block for n in created] == [33]
+    assert len(idx) == 4
+    assert chunk_key(other, 1, BL) == (50, 51, 52, 53)
+    # interior nodes cannot be removed; subtree order is leaves-first
+    root_node = idx.walk(toks[:4])[0]
+    with pytest.raises(KVStoreError):
+        idx.remove(root_node)
+    sub = idx.subtree(root_node)
+    assert sub[-1] is root_node and len(sub) == 4
+
+
+def test_cache_insert_hit_and_lru_eviction():
+    led = _ledger()
+    cache = PrefixCache(led, capacity_blocks=3)
+    led.alloc(1, lines=12)
+    t1 = list(range(100, 112))
+    cache.insert(t1, led.tables[1])
+    assert cache.cached_blocks() == 3
+    assert all(led.refcount(b) == 2 for b in led.tables[1])
+    # hit: peek has no side effects, lookup_pin counts + pins
+    assert cache.peek_blocks(t1[:8]) == led.tables[1][:2]
+    assert cache.stats["hits"] == 0
+    run = cache.lookup_pin(rid=2, tokens=t1[:8])
+    assert run == led.tables[1][:2]
+    assert cache.stats == {"lookups": 1, "hits": 1, "hit_blocks": 2,
+                           "hit_tokens": 8, "inserted_blocks": 3,
+                           "evicted_blocks": 0}
+    # capacity pressure: inserting a second prefix LRU-evicts unpinned
+    # leaves, never the pinned run
+    led.alloc(3, lines=8)
+    t3 = list(range(200, 208))
+    cache.insert(t3, led.tables[3])
+    assert cache.cached_blocks() == 3
+    assert set(run) <= set(cache.index.blocks())
+    cache.unpin(2)
+    assert not cache.pinned()
+
+
+def test_free_returns_only_unique_blocks():
+    """Satellite: share-aware free counts.  A shared-prefix request's
+    release only reclaims its unique suffix; the last referent reclaims
+    the head."""
+    led = _ledger()
+    cache = PrefixCache(led)
+    led.alloc(1, lines=12)                       # 3 blocks
+    head = led.tables[1][:2]
+    cache.insert(list(range(12)), led.tables[1])  # refs: 2,2,2
+    assert led.free(1) == 0                      # cache still holds all 3
+    led.alloc(2, lines=12, shared=head)          # adopts 2, allocs 1
+    assert led.shared_head_lines(2) == 8
+    assert led.shared_blocks_count() == 2        # the adopted head blocks
+    assert led.shared_saved_blocks() == 2
+    assert led.free(2) == 1, "only the unique suffix block returns"
+    assert cache.release_all() == 3              # last referent frees head
+    assert led.free_blocks() == led.num_blocks
+    with pytest.raises(KVStoreError):
+        led.release(head)                        # double-free refused
+
+
+def test_ledger_cow_on_shared_tail_append():
+    led = _ledger()
+    led.alloc(1, lines=6)                        # blocks A,B; B half full
+    a, b = led.tables[1]
+    led.retain([a, b])                           # external holder
+    led.alloc(2, lines=6, shared=[a, b])         # adversarial: unaligned
+    assert led.shared_head_lines(2) == 6
+    assert led.append_line(2) == 7               # writes into shared B
+    assert led.last_cow is not None
+    rid, old_b, repl = led.last_cow
+    assert (rid, old_b) == (2, b) and repl != b
+    assert led.tables[2] == [a, repl]
+    assert led.refcount(b) == 2                  # rid 1 + the retain
+    assert led.shared_head_lines(2) == 4, "COW clamps the shared head"
+    # rid 1's own tail is also shared (the retain): appending COWs too,
+    # leaving the original bytes to the external holder alone
+    led.append_line(1, 3)
+    assert led.last_cow is not None and led.last_cow[:2] == (1, b)
+    assert led.refcount(b) == 1                  # only the retain remains
+    assert led.free(2) == 1                      # repl only; A still shared
+    assert led.free(1) == 2                      # its COW copy + 3rd block
+    assert led.release([a, b]) == 2
+
+
+def test_evict_obstructing_spares_pinned_subtrees():
+    led = _ledger()
+    cache = PrefixCache(led)
+    led.alloc(1, lines=16)
+    toks = list(range(16))
+    cache.insert(toks, led.tables[1])
+    led.free(1)
+    first, second = cache.index.blocks()[0], cache.index.blocks()[1]
+    cache.lookup_pin(rid=9, tokens=toks[:4])     # pins `first`
+    assert cache.evict_obstructing({first}) == 0, \
+        "a pinned block anchors its whole subtree"
+    assert cache.cached_blocks() == 4
+    # an unpinned interior block takes its descendants with it
+    assert cache.evict_obstructing({second}) == 3
+    assert cache.cached_blocks() == 1
+    cache.unpin(9)
+    assert cache.release_all() == 1
+
+
+# ---------------------------------------------------------------------------
+# property: no leak, no double-free, refcounts == references (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _check_conservation(led: BlockLedger, cache: PrefixCache):
+    refs = {}
+    for table in led.tables.values():
+        for b in table:
+            refs[b] = refs.get(b, 0) + 1
+    for fb in led.fixed_block.values():
+        if fb is not None:
+            refs[fb] = refs.get(fb, 0) + 1
+    for node in cache.index._nodes:
+        refs[node.block] = refs.get(node.block, 0) + 1
+    assert refs == led._refs, "refcounts drifted from actual references"
+    assert len(set(led._free)) == len(led._free), "double-freed block"
+    assert set(led._free).isdisjoint(led._refs)
+    assert len(led._free) + len(led._refs) == led.num_blocks, "leaked block"
+
+
+def _key_of(group: int, lines: int):
+    return [(group, j) for j in range(lines)]
+
+
+@given(st.booleans(),
+       st.lists(st.tuples(st.integers(min_value=0, max_value=5),
+                          st.integers(min_value=0, max_value=11),
+                          st.integers(min_value=1, max_value=23)),
+                min_size=1, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_refcount_invariant_under_random_interleavings(with_fixed, ops):
+    """Random alloc/share/append(+COW)/free/insert/evict schedules: the
+    per-block refcount must always equal the number of table references
+    plus cache references, with no block leaked or double-freed, and a
+    full teardown must return the entire pool."""
+    led = _ledger(num_blocks=32, fixed=100 if with_fixed else 0)
+    cache = PrefixCache(led, capacity_blocks=10)
+    next_rid, live = 0, {}                        # rid -> group
+    for kind, a, b in ops:
+        if kind in (0, 1):                        # alloc (1: via cache hit)
+            g, lines = a % 3, b
+            run = cache.peek_blocks(_key_of(g, lines)) if kind == 1 else []
+            run = run[:led.line_blocks_for(lines)]
+            need = (led.line_blocks_for(lines) - len(run)
+                    + (1 if led.costs.fixed_bytes > 0 else 0))
+            if need <= led.free_blocks():
+                led.alloc(next_rid, lines, shared=run or None)
+                live[next_rid] = g
+                next_rid += 1
+        elif kind == 2 and live:                  # append (may COW)
+            rid = sorted(live)[a % len(live)]
+            old, table = led.lines(rid), led.tables[rid]
+            cow = 1 if (old % BL and table
+                        and led.refcount(table[-1]) > 1) else 0
+            grow = led.line_blocks_for(old + 1) - len(table)
+            if cow + max(grow, 0) <= led.free_blocks():
+                led.append_line(rid)
+        elif kind == 3 and live:                  # cache the aligned head
+            rid = sorted(live)[a % len(live)]
+            k = led.lines(rid) // BL
+            if k:
+                cache.insert(_key_of(live[rid], k * BL),
+                             led.tables[rid][:k])
+        elif kind == 4 and live:                  # free a request
+            rid = sorted(live)[a % len(live)]
+            table_len = len(led.tables[rid]) + (
+                1 if led.fixed_block[rid] is not None else 0)
+            freed = led.free(rid)
+            del live[rid]
+            assert 0 <= freed <= table_len
+        elif kind == 5:                           # eviction pressure
+            if b % 2:
+                cache.evict_obstructing({b % 32})
+            else:
+                cache._evict_to(b % 8)
+        _check_conservation(led, cache)
+    for rid in list(live):
+        led.free(rid)
+        _check_conservation(led, cache)
+    cache.release_all()
+    assert led.free_blocks() == led.num_blocks, "teardown leaked blocks"
+
+
+# ---------------------------------------------------------------------------
+# golden lockstep trace: identical decisions AND identical hit accounting
+# ---------------------------------------------------------------------------
+
+_BLK = 8
+# (prompt_len, decode_len, prefix_id, prefix_len) per arrival; pid None
+# means a unique prompt.  Groups repeat so later arrivals hit.
+_PTRACE = [("arrive", 24, 4, 0, 24), ("tick",),
+           ("arrive", 24, 5, 0, 24), ("arrive", 18, 4, None, 0), ("tick",),
+           ("arrive", 25, 3, 0, 24), ("arrive", 20, 6, 1, 16), ("tick",),
+           ("arrive", 20, 4, 1, 16), ("tick",), ("tick",)]
+
+
+def _group_tokens(cfg, key):
+    out = {}
+    for _, _, _, pid, pflen in (op for op in _PTRACE if op[0] == "arrive"):
+        if pid is not None and pid not in out:
+            out[pid] = jax.random.randint(
+                jax.random.fold_in(key, 1000 + pid), (1, 32), 0,
+                cfg.vocab_size)
+    return out
+
+
+def _hit_stats(cache):
+    return {k: cache.stats[k]
+            for k in ("lookups", "hits", "hit_blocks", "hit_tokens")}
+
+
+def _run_live_prefix_trace(cfg, params, kernel):
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=kernel, block_lines=_BLK,
+                          prefix_cache=True)
+    key = jax.random.PRNGKey(7)
+    gtoks = _group_tokens(cfg, key)
+    rids, saved = [], []
+    for i, op in enumerate(_PTRACE):
+        if op[0] == "arrive":
+            _, plen, dlen, pid, pflen = op
+            toks = jax.random.randint(jax.random.fold_in(key, i),
+                                      (1, plen), 0, cfg.vocab_size)
+            if pid is not None:
+                toks = toks.at[0, :pflen].set(gtoks[pid][0, :pflen])
+            req = Request(prompt_len=plen, max_new_tokens=dlen,
+                          prompt_tokens=toks, prefix_id=pid,
+                          prefix_len=pflen)
+            rids.append(req.rid)
+            cluster.submit(req)
+        cluster.step()
+        saved.append(tuple(e.store.ledger.shared_saved_blocks()
+                           for e in cluster.engines))
+    steps = 0
+    while cluster.pending() and steps < 50:
+        cluster.step()
+        steps += 1
+    assert not cluster.pending()
+    stats = [_hit_stats(e.prefix_cache) for e in cluster.engines]
+    return rids, steps, stats, saved, cluster.stats["prefix_hits"]
+
+
+def _run_sim_prefix_trace(cfg, rids, extra_ticks):
+    kernel = AcceLLMScheduler()
+    kernel.trace = []
+    perf = PerfModel(cfg, InstanceSpec(H100, 4))
+    sim = Simulator(AcceLLMPolicy(kernel=kernel), perf, n_instances=2,
+                    block_lines=_BLK, prefix_cache=True)
+    sim.kick = lambda inst: None
+    pol = sim.policy
+
+    def tick(skip_iid=None):
+        finished = {}
+        for inst in sim.instances:
+            if inst.iid == skip_iid:
+                continue
+            done_here = []
+            for rid, r in list(inst.decode_batch.items()):
+                r.generated += 1
+                if r.done:
+                    del inst.decode_batch[rid]
+                    done_here.append(r)
+            finished[inst.iid] = done_here
+        for inst in sim.instances:
+            if inst.iid in finished:
+                pol.on_decode_done(inst, finished[inst.iid])
+
+    arrivals = iter(rids)
+    saved = []
+    for op in _PTRACE:
+        skip = None
+        if op[0] == "arrive":
+            _, plen, dlen, pid, pflen = op
+            r = SimRequest(rid=next(arrivals), arrival=0.0,
+                           prompt_len=plen, decode_len=dlen)
+            r.prefix_id, r.prefix_len = pid, pflen
+            inst = pol.route(r)
+            pol._prefix_stamp(inst, r)      # the Prefill-creation stamp
+            r.generated = 1                 # the prefill's first token
+            pol.on_prefill_done(inst, [r])
+            skip = inst.iid
+        tick(skip_iid=skip)
+        saved.append(tuple(i.synced_store().ledger.shared_saved_blocks()
+                           for i in sim.instances))
+    for _ in range(extra_ticks):
+        tick()
+    stats = [_hit_stats(i.prefix_cache) for i in sim.instances]
+    return kernel.trace, stats, saved
+
+
+def test_golden_prefix_trace_live_vs_sim(setup):
+    """Under prefix-heavy traffic the two backends must agree on every
+    kernel decision, on every cache's hit accounting, and — tick for
+    tick — on the pool blocks saved by sharing."""
+    cfg, params = setup
+    live_kernel = AcceLLMScheduler()
+    live_kernel.trace = []
+    rids, extra, live_stats, live_saved, hits = \
+        _run_live_prefix_trace(cfg, params, live_kernel)
+    sim_trace, sim_stats, sim_saved = _run_sim_prefix_trace(cfg, rids, extra)
+    assert live_kernel.trace == sim_trace, (
+        "shared kernel diverged under prefix traffic:\n"
+        f"live: {live_kernel.trace}\nsim:  {sim_trace}")
+    assert live_stats == sim_stats, (
+        "prefix-hit accounting diverged:\n"
+        f"live: {live_stats}\nsim:  {sim_stats}")
+    assert hits == sum(s["hits"] for s in live_stats) > 0, \
+        "trace exercised no prefix hits"
+    assert live_saved == sim_saved, (
+        "shared-block dedup accounting diverged per tick:\n"
+        f"live: {live_saved}\nsim:  {sim_saved}")
+    assert any(s > 0 for tick_ in live_saved for s in tick_), \
+        "sharing never materialized in the ledgers"
+
+
+# ---------------------------------------------------------------------------
+# live open loop: token bit-parity + ledger conservation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _reuse_spec():
+    return WorkloadSpec(
+        arrival=Poisson(rate=0.6, duration=14.0),
+        lengths=UniformLengths(prompt=(10, 16), decode=(3, 6)),
+        name="prefix-heavy",
+        prefix_reuse=PrefixReuse(pool=2, reuse=0.8, prefix_len=8))
+
+
+def _run_live(cfg, params, prefix_cache: bool):
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=4,
+                          kv_capacity=64, policy=AcceLLMScheduler(),
+                          block_lines=_BLK, prefix_cache=prefix_cache)
+    done = cluster.run(max_steps=300,
+                       source=_reuse_spec().source(seed=3, cfg=cfg))
+    return cluster, done
+
+
+def test_live_tokens_bit_identical_with_cache_on(setup):
+    cfg, params = setup
+    off_cluster, off = _run_live(cfg, params, prefix_cache=False)
+    on_cluster, on = _run_live(cfg, params, prefix_cache=True)
+    assert off_cluster.stats["prefix_hits"] == 0
+    assert on_cluster.stats["prefix_hits"] > 0, \
+        "reuse traffic produced no hits"
+    assert on_cluster.stats["prefix_hit_tokens"] > 0
+    toks_off = {r.rid: r.output_tokens for r in off}
+    toks_on = {r.rid: r.output_tokens for r in on}
+    assert toks_off.keys() == toks_on.keys()
+    assert toks_off == toks_on, \
+        "prefix-cache adoption changed a generated token"
+
+
+def test_live_batch_arrival_never_overcommits_slots(setup):
+    """Regression: stamping a hit pins the cached run, which can wall
+    off the slot region holding it — ``free_slots`` shrinks between the
+    policy's admission count and execution.  A batch arrival of more
+    requests than slots under heavy reuse used to trip the no-free-slot
+    assert in ``_take_slot``; admission must re-count capacity per
+    request (and abandon a stamp that froze the last free slot)."""
+    cfg, params = setup
+    spec = WorkloadSpec(
+        arrival=Batch(n=12),
+        lengths=UniformLengths(prompt=(10, 16), decode=(3, 6)),
+        name="thundering-herd",
+        prefix_reuse=PrefixReuse(pool=2, reuse=0.8, prefix_len=8))
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=3,
+                          kv_capacity=64, policy=AcceLLMScheduler(),
+                          block_lines=_BLK, prefix_cache=True)
+    done = cluster.run(max_steps=400, source=spec.source(seed=3, cfg=cfg))
+    assert len(done) == 12, "batch arrival did not drain"
+    assert cluster.stats["prefix_hits"] > 0, \
+        "reuse batch produced no hits"
+
+
+def test_live_ledger_conservation_under_reuse(setup):
+    """Per scheduling iteration, every engine's pool must conserve:
+    distinct used blocks == table references + cache references − the
+    blocks sharing saved, and used-bytes stay the line-exact identity
+    (sharing dedups BLOCKS, never changes a request's line count)."""
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=4,
+                          kv_capacity=64, policy=AcceLLMScheduler(),
+                          block_lines=_BLK, prefix_cache=True)
+    source = iter(_reuse_spec().source(seed=3, cfg=cfg))
+    pending = next(source, None)
+    saw_sharing = False
+    for _ in range(300):
+        while pending is not None and pending.arrival <= cluster.now:
+            cluster.submit(pending, stamp_arrival=False)
+            pending = next(source, None)
+        if pending is None and not cluster.pending():
+            break
+        cluster.step()
+        for eng in cluster.engines:
+            led = eng.store.ledger
+            table_refs = sum(len(t) for t in led.tables.values()) + sum(
+                1 for fb in led.fixed_block.values() if fb is not None)
+            cache_refs = eng.prefix_cache.cached_blocks()
+            assert led.used_blocks() == (table_refs + cache_refs
+                                         - led.shared_saved_blocks())
+            assert led.free_blocks() + led.used_blocks() == led.num_blocks
+            assert led.used_bytes() == pytest.approx(sum(
+                led.costs.bytes_at(n) for n in led._lines.values()))
+            if led.shared_saved_blocks():
+                saw_sharing = True
+    assert not cluster.pending(), "trace did not drain"
+    assert saw_sharing, "no block was ever shared"
+
+
+def test_sim_prefix_run_drains_and_conserves(setup):
+    cfg, _ = setup
+    sim = Simulator(AcceLLMPolicy(), PerfModel(cfg, InstanceSpec(H100, 4)),
+                    n_instances=2, block_lines=_BLK, prefix_cache=True)
+    done = sim.run(source=_reuse_spec().source(seed=3), horizon=200.0)
+    assert len(done) == len(sim.submitted)
+    hits = sum(i.prefix_cache.stats["hits"] for i in sim.instances
+               if i.prefix_cache is not None)
+    assert hits > 0
+    for inst in sim.instances:
+        led = inst.synced_store().ledger
+        # drained: only cache references remain, one per cached block
+        assert set(led._refs) == set(inst.prefix_cache.index.blocks())
+        assert all(c == 1 for c in led._refs.values())
+
+
+# ---------------------------------------------------------------------------
+# workload: the reuse knob keeps the stream backend- and cache-agnostic
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_reuse_stream_is_shared_and_deterministic(setup):
+    cfg, _ = setup
+    spec = _reuse_spec()
+    live = list(spec.source(seed=5, cfg=cfg))
+    sim = list(spec.source(seed=5))
+    assert [(r.rid, r.arrival, r.prompt_len, r.prefix_id, r.prefix_len)
+            for r in live] == \
+        [(r.rid, r.arrival, r.prompt_len, r.prefix_id, r.prefix_len)
+         for r in sim]
+    by_group = {}
+    for r in live:
+        if r.prefix_id is not None:
+            by_group.setdefault(r.prefix_id, []).append(r)
+    assert any(len(v) >= 2 for v in by_group.values()), \
+        "reuse=0.8 must repeat a group"
+    for members in by_group.values():
+        head = np.asarray(members[0].prompt_tokens)[0]
+        for r in members[1:]:
+            n = min(members[0].prefix_len, r.prefix_len)
+            assert np.array_equal(np.asarray(r.prompt_tokens)[0, :n],
+                                  head[:n]), \
+                "group members must share their declared head tokens"
+        for r in members:
+            assert r.prefix_len <= r.prompt_len
+
+
+def test_prefix_reuse_growth_caps():
+    pr = PrefixReuse(pool=1, reuse=1.0, prefix_len=8, growth=4,
+                     max_prefix=16)
+    spec = WorkloadSpec(arrival=Poisson(rate=2.0, duration=10.0),
+                        lengths=UniformLengths(prompt=(40, 48),
+                                               decode=(1, 2)),
+                        prefix_reuse=pr)
+    declared = [r.prefix_len for r in spec.source(seed=0)]
+    assert len(declared) >= 4
+    assert declared[0] == 8, "first draw uses the base prefix length"
+    assert max(declared) <= pr.cap == 16, "growth must cap at max_prefix"
+    assert declared[-1] == 16, "history accretes across draws"
