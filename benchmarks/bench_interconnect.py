@@ -1,6 +1,10 @@
 """Paper Fig. 10: interconnect-bandwidth sweep — AcceLLM and Splitwise reach
-peak performance at similar link speeds (mirror traffic is minimal)."""
-import dataclasses
+peak performance at similar link speeds (mirror traffic is minimal).
+
+The sweep varies the instance-to-instance network (``inter_link_gbps`` on
+the :class:`InstanceSpec`) while the intra-slice fabric stays at the
+device's native NVLink-class speed — mirror/stream traffic crosses the
+network, tensor-parallel collectives never do."""
 import time
 
 from benchmarks.common import CFG, emit, run_sim
@@ -9,12 +13,14 @@ from repro.sim import AcceLLMPolicy, H100, InstanceSpec, SplitwisePolicy
 
 def main():
     for link in (50, 200, 450, 900):
-        dev = dataclasses.replace(H100, link_gbps=float(link))
+        inst = InstanceSpec(H100, 4,
+                            intra_link_gbps=H100.link_gbps,
+                            inter_link_gbps=float(link))
         row = {}
         t0 = time.perf_counter()
         for name, pol in (("splitwise", SplitwisePolicy(1)),
                           ("accellm", AcceLLMPolicy())):
-            _, s = run_sim(pol, "mixed", 10.0, 40.0, 4, device=dev)
+            _, s = run_sim(pol, "mixed", 10.0, 40.0, 4, inst=inst)
             row[name] = s
         us = (time.perf_counter() - t0) * 1e6
         emit(f"fig10_link{link}GBs", us,

@@ -1,0 +1,162 @@
+"""Mesh serving benchmarks (repro.meshserve).
+
+Two questions, answered on the forced 8-device CPU pod (the flag must
+precede jax init, so this module appends it when run standalone; under
+``benchmarks.run`` jax is already up and the sweep degrades to the
+widths the platform offers):
+
+* **sharded decode** — paged fused decode tokens/s at 1 / 2 / 4-way
+  model parallel vs the single-device engine, tokens asserted
+  bit-identical (model-axis sharding must never change the argmax);
+* **mirror transport** — walltime of a delta ``MirrorSync`` between two
+  instances when the copy rides the device interconnect (disjoint mesh
+  slices, gather → device_transfer → scatter) vs the host-copy path
+  (both engines on the default device).
+
+Writes a ``BENCH_mesh.json`` snapshot next to the repo root.  On a CPU
+host the "interconnect" is memcpy, so the mirror comparison reports
+transport overhead, not a speedup; the snapshot records both numbers
+plus the d2d/host-copy counters proving which path ran.
+"""
+import json
+import os
+import time
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax
+
+from benchmarks.common import SMOKE, emit
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import InstanceEngine, Request
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_mesh.json")
+
+NUM_SLOTS = 8
+
+
+def _reqs(cfg, n, new):
+    key = jax.random.PRNGKey(5)
+    lens = [8 + (5 * i) % 24 for i in range(n)]
+    return [Request(prompt_len=p, max_new_tokens=new,
+                    prompt_tokens=jax.random.randint(
+                        jax.random.fold_in(key, i), (1, p), 0,
+                        cfg.vocab_size))
+            for i, p in enumerate(lens)]
+
+
+def _decode_run(cfg, params, mesh, active, new, steps):
+    eng = InstanceEngine(cfg, params, num_slots=NUM_SLOTS, kv_capacity=64,
+                         mesh=mesh)
+    reqs = _reqs(cfg, active, new)
+    for r in reqs:
+        eng.prefill_request(r)
+    t0 = time.perf_counter()
+    while eng.slot_req:
+        eng.decode_multi(steps=steps)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output_tokens) for r in reqs) - len(reqs)
+    return dt, toks, [r.output_tokens for r in reqs]
+
+
+def _mirror_run(cfg, params, slices, syncs):
+    """Stream a replica across and time ``syncs`` one-line delta mirrors
+    (decode on the primary between syncs, off the clock)."""
+    from repro.meshserve import STATS
+    mk = lambda sl: InstanceEngine(cfg, params, num_slots=2, kv_capacity=64,
+                                   mesh=sl)
+    a, b = (mk(slices[0]), mk(slices[1])) if slices else (mk(None), mk(None))
+    # keep the primary resident: decode() auto-releases a finished slot
+    (req,) = _reqs(cfg, 1, syncs + 2)
+    slot = a.prefill_request(req)
+    chunks, length, last, lines = a.export_stream(slot)
+    b_slot = b.free_slots()[0]
+    b.import_stream(b_slot, chunks, length, last, lines, req,
+                    as_replica_of=(0, slot))
+    STATS.reset()
+    total = 0.0
+    moved = 0.0
+    for _ in range(syncs):
+        a.decode()
+        t0 = time.perf_counter()
+        moved += b.sync_replica_from(a, slot, b_slot)
+        total += time.perf_counter() - t0
+    return total / syncs, moved, STATS.d2d_copies, STATS.host_copies
+
+
+def main():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    new = 8 if SMOKE else 24
+    steps = 4 if SMOKE else 8
+    active = 4
+    n_dev = jax.device_count()
+    snap = {"devices": n_dev, "decode_tokens": new, "fused_steps": steps,
+            "active_slots": active, "tp": {}, "mirror": {}}
+
+    from repro.meshserve import carve_slices
+
+    # warm + measure the single-device reference
+    _decode_run(cfg, params, None, active, new, steps)
+    t_ref, toks, ref = _decode_run(cfg, params, None, active, new, steps)
+    emit("mesh_decode_tp1", t_ref / toks * 1e6,
+         f"tok_s={toks / t_ref:.1f}")
+    snap["tp"]["1"] = {"us_per_token": round(t_ref / toks * 1e6, 1),
+                       "tokens_per_s": round(toks / t_ref, 1),
+                       "tokens_bit_identical": True}
+
+    for tp in (2, 4):
+        if n_dev < tp:
+            emit(f"mesh_decode_tp{tp}", 0.0, "skipped=needs_devices")
+            continue
+        (sl,) = carve_slices(tp, n_instances=1)
+        _decode_run(cfg, params, sl, active, new, steps)
+        t, toks_s, out = _decode_run(cfg, params, sl, active, new, steps)
+        assert out == ref, f"tp={tp} sharded tokens diverge"
+        emit(f"mesh_decode_tp{tp}", t / toks_s * 1e6,
+             f"tok_s={toks_s / t:.1f};vs_tp1={t_ref / t:.2f}x")
+        snap["tp"][str(tp)] = {
+            "us_per_token": round(t / toks_s * 1e6, 1),
+            "tokens_per_s": round(toks_s / t, 1),
+            "vs_single_device": round(t_ref / t, 2),
+            "tokens_bit_identical": True,
+        }
+
+    syncs = 4 if SMOKE else 16
+    t_host, bytes_host, _, _ = _mirror_run(cfg, params, None, syncs)
+    emit("mesh_mirror_hostcopy", t_host * 1e6,
+         f"bytes={bytes_host:.0f}")
+    snap["mirror"]["host_copy"] = {"us_per_sync": round(t_host * 1e6, 1),
+                                   "bytes": bytes_host}
+    if n_dev >= 4:
+        slices = carve_slices(2, n_instances=2)
+        t_coll, bytes_coll, d2d, host = _mirror_run(cfg, params, slices,
+                                                    syncs)
+        assert d2d > 0 and host == 0, "mirror fell off the device fabric"
+        assert bytes_coll == bytes_host, "transport changed the ledger"
+        emit("mesh_mirror_collective", t_coll * 1e6,
+             f"bytes={bytes_coll:.0f};d2d_copies={d2d};host_copies={host};"
+             f"vs_hostcopy={t_host / t_coll:.2f}x")
+        snap["mirror"]["collective"] = {
+            "us_per_sync": round(t_coll * 1e6, 1),
+            "bytes": bytes_coll,
+            "d2d_copies": d2d,
+            "host_copies": host,
+            "vs_host_copy": round(t_host / t_coll, 2),
+        }
+    else:
+        emit("mesh_mirror_collective", 0.0, "skipped=needs_devices")
+
+    with open(SNAPSHOT, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

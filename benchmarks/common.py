@@ -30,8 +30,11 @@ SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 DEFAULT_SLO = SLO(ttft=2.0, tbt=0.2)
 
 
-def perf(device=H100, n_dev=4) -> PerfModel:
-    return PerfModel(CFG, InstanceSpec(device, n_dev))
+def perf(device=H100, n_dev=4, inst: Optional[InstanceSpec] = None
+         ) -> PerfModel:
+    """Cost model for one instance; pass ``inst`` to price a fully
+    specified slice (per-link bandwidths, heterogeneous pods)."""
+    return PerfModel(CFG, inst or InstanceSpec(device, n_dev))
 
 
 def decode_time(pm: PerfModel, lengths) -> float:
@@ -43,15 +46,19 @@ def decode_time(pm: PerfModel, lengths) -> float:
 
 def run_sim(policy, workload, rate, duration, n_instances, device=H100,
             seed=0, horizon_mult=10.0, spec: Optional[WorkloadSpec] = None,
-            slo: Optional[SLO] = DEFAULT_SLO):
+            slo: Optional[SLO] = DEFAULT_SLO,
+            inst: Optional[InstanceSpec] = None):
     """Simulate ``spec`` (default: Poisson × Table-2 at ``rate`` for
     ``duration``) under ``policy`` and summarize, including SLO
-    attainment/goodput."""
+    attainment/goodput.  ``inst`` prices every instance on an explicit
+    :class:`InstanceSpec` (e.g. per-link bandwidths) instead of a bare
+    ``device``."""
     if SMOKE:
         rate, duration = min(rate, 4.0), min(duration, 5.0)
     if spec is None:
         spec = table2_spec(workload, rate=rate, duration=duration)
-    sim = Simulator(policy, perf(device), n_instances=n_instances)
+    sim = Simulator(policy, perf(device, inst=inst),
+                    n_instances=n_instances)
     sim.run(source=spec.source(seed=seed), horizon=duration * horizon_mult)
     # score ALL offered traffic (stragglers count as unfinished / SLO
     # misses) over the time the cluster actually ran

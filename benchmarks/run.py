@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.bench_decode",          # paged fused decode vs dense per-step
     "benchmarks.bench_fleet",           # fault injection: failover vs re-prefill
     "benchmarks.bench_prefix",          # prefix cache: reuse-probability sweep
+    "benchmarks.bench_mesh",            # TP mesh decode + collective mirror
 ]
 
 

@@ -66,6 +66,14 @@ class ServeSpec:
     #: drains applied between scheduler iterations on the iteration
     #: clock; the same schedule drives the simulator in modeled seconds
     fleet: Optional[FleetSchedule] = None
+    #: tensor-parallel width per instance: carve the host's devices into
+    #: n_instances disjoint ``model``-axis mesh slices (repro.meshserve)
+    #: and shard each engine's params + KV pool across its slice; None
+    #: keeps every engine on the default device
+    mesh_tp: Optional[int] = None
+    #: heterogeneous pod: one InstanceSpec per instance (slice widths
+    #: follow ``spec.n_devices``); overrides mesh_tp's uniform carving
+    mesh_specs: Optional[Sequence] = None
     # legacy request sampling (used when `traffic` is not given)
     workload: str = "mixed"
     n_requests: int = 16
@@ -192,6 +200,14 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
     policy = get_policy(spec.policy, **kwargs)
     fleet = (FleetController(spec.fleet, seed=spec.seed)
              if spec.fleet is not None else None)
+    mesh = None
+    if spec.mesh_specs is not None:
+        from repro.meshserve import MeshPlacement
+        mesh = MeshPlacement.carve(spec.n_instances,
+                                   specs=spec.mesh_specs)
+    elif spec.mesh_tp is not None:
+        from repro.meshserve import MeshPlacement
+        mesh = MeshPlacement.carve(spec.n_instances, tp=spec.mesh_tp)
     return LiveCluster(cfg, params, spec.n_instances, spec.num_slots,
                        spec.kv_capacity, policy,
                        temperature=spec.temperature,
@@ -200,7 +216,7 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
                        fuse_decode_steps=spec.fuse_decode_steps,
                        prefix_cache=spec.prefix_cache,
                        prefix_cache_blocks=spec.prefix_cache_blocks,
-                       fleet=fleet)
+                       fleet=fleet, mesh=mesh)
 
 
 def serve(spec: ServeSpec,

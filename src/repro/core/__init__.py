@@ -1,9 +1,11 @@
 """AcceLLM's contribution: redundant-KV instance pairs, dynamic roles,
 and state-bytes load balancing (scheduler + redundancy + balancer).
 
-The cluster facade is loaded lazily (PEP 562) because
-``repro.core.cluster`` builds on ``repro.scheduling``, which itself uses
-the pure helpers below — a cycle if everything imported eagerly.
+``Placement`` is loaded lazily (PEP 562) because it lives in
+``repro.scheduling.live``, which itself uses the pure helpers below — a
+cycle if everything imported eagerly.  The historical ``AcceLLMCluster``
+facade is gone: construct clusters through ``repro.api.serve`` (or
+``LiveCluster`` with ``AcceLLMScheduler`` directly).
 """
 from repro.core.balancer import Item, imbalance, partition, should_rebalance
 from repro.core.kvbytes import (bytes_per_token, decode_read_bytes,
@@ -11,17 +13,15 @@ from repro.core.kvbytes import (bytes_per_token, decode_read_bytes,
                                 state_bytes_at, static_state_bytes)
 
 __all__ = [
-    "AcceLLMCluster", "Pair", "Placement", "Item", "partition", "imbalance",
+    "Placement", "Item", "partition", "imbalance",
     "should_rebalance", "bytes_per_token", "fixed_state_bytes",
     "recurrent_state_bytes", "static_state_bytes",
     "state_bytes_at", "decode_read_bytes",
 ]
 
-_LAZY = ("AcceLLMCluster", "Pair", "Placement")
-
 
 def __getattr__(name):
-    if name in _LAZY:
-        from repro.core import cluster
-        return getattr(cluster, name)
+    if name == "Placement":
+        from repro.scheduling.live import Placement
+        return Placement
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

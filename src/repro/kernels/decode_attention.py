@@ -258,7 +258,24 @@ def paged_decode_attention(
     Mosaic kernel on TPU (interpret mode anywhere else, so the
     ``pallas`` backend stays testable on CPU CI), the jnp gather oracle
     otherwise.  Both paths read K/V exclusively through the block
-    tables — the dense per-slot window is never touched."""
+    tables — the dense per-slot window is never touched.
+
+    Under an active mesh (repro.meshserve) the pools arrive with their
+    KV-head dim on the slice's model axis; the gather is per-head, so
+    each shard touches only its own heads' blocks and the result needs
+    no collective until the attention output hits the row-parallel
+    output projection.  The tables and lengths are tiny and replicated."""
+    from repro import sharding
+    # pin the pools' KV-head dim where the store committed it, so GSPMD
+    # never rematerializes the whole pool for the gather (no-op without
+    # a mesh; skipped when the KV heads don't divide the slice — the
+    # store then keeps the pool replicated and only q heads split)
+    ctx = sharding.current()
+    if (ctx.mesh is not None and ctx.model_axis is not None
+            and k_pool.ndim >= 4
+            and k_pool.shape[2] % ctx.model_size == 0):
+        k_pool = sharding.constrain(k_pool, None, None, "model", None)
+        v_pool = sharding.constrain(v_pool, None, None, "model", None)
     if use_pallas:
         return paged_decode_attention_pallas(
             q, k_pool, v_pool, block_tables, lengths, scale=scale,

@@ -22,6 +22,13 @@ The store executes the two redundancy data movements in *line* units:
 * :meth:`stream_slot` / :meth:`import_chunk` — whole-state transfers as
   per-layer chunks, the unit the mesh overlaps with prefill compute
   (AcceLLM §4.2.4).
+
+When the two stores live on different mesh slices (``repro.meshserve``:
+each instance's pool is committed to its own device set), both movements
+switch from the slice-local copy jits to the collective pulls in
+``repro.meshserve.collectives`` — gather on the source slice, one
+device-to-device hop, scatter on the destination — so redundancy traffic
+never bounces through the host.
 """
 from __future__ import annotations
 
@@ -71,6 +78,16 @@ def _copy_entry(dst, src, dst_slot, src_slot):
 @jax.jit
 def _gather_rows(arr, dst_slot, src_slots, src_pos, dst_pos):
     return arr.at[:, dst_slot, dst_pos].set(arr[:, src_slots, src_pos])
+
+
+def _colocated(a, b) -> bool:
+    """Whether two leaves share a device set (the slice-local fast
+    path); differing sets route through the meshserve collectives."""
+    sa = getattr(a, "sharding", None)
+    sb = getattr(b, "sharding", None)
+    if sa is None or sb is None:
+        return True
+    return sa.device_set == sb.device_set
 
 
 class PagedStore:
@@ -294,6 +311,9 @@ class PagedStore:
         for i, pj, key, kind in self._paths:
             dst = self.state["layers"][i][pj][key]
             src = sub_state["layers"][i][pj][key]
+            if not _colocated(dst, src):
+                from repro.meshserve import collectives
+                src = collectives.device_transfer(src, dst)
             if kind == "line":
                 h = min(hi, src.shape[2], dst.shape[2])
                 l = min(lo, h)
@@ -305,8 +325,12 @@ class PagedStore:
                 self.state["layers"][i][pj][key] = dst.at[:, slot].set(
                     src[:, src_slot])
         if "enc_out" in self.state:
+            enc = sub_state["enc_out"]
+            if not _colocated(self.state["enc_out"], enc):
+                from repro.meshserve import collectives
+                enc = collectives.device_transfer(enc, self.state["enc_out"])
             self.state["enc_out"] = self.state["enc_out"].at[slot].set(
-                sub_state["enc_out"][src_slot])
+                enc[src_slot])
 
     # -- per-layer streamed transfer (§4.2.4) ----------------------------------
     def stream_slot(self, slot: int) -> Iterator[Tuple[tuple, jnp.ndarray]]:
@@ -320,11 +344,19 @@ class PagedStore:
 
     def import_chunk(self, slot: int, path: tuple, chunk: jnp.ndarray):
         if path[0] == "enc_out":
-            self.state["enc_out"] = self.state["enc_out"].at[slot].set(
-                chunk[0])
+            target = self.state["enc_out"]
+            if not _colocated(target, chunk):
+                from repro.meshserve import collectives
+                chunk = collectives.device_transfer(chunk, target)
+            self.state["enc_out"] = target.at[slot].set(chunk[0])
             return
         i, pj, key = path
         arr = self.state["layers"][i][pj][key]
+        if not _colocated(arr, chunk):
+            # per-layer chunk arriving from another mesh slice: one
+            # device-to-device hop, then the write is slice-local
+            from repro.meshserve import collectives
+            chunk = collectives.device_transfer(chunk, arr)
         self.state["layers"][i][pj][key] = arr.at[:, slot].set(chunk[:, 0])
 
     # -- delta line copy (the §4.1.2 mirror) -----------------------------------
@@ -345,16 +377,23 @@ class PagedStore:
                 continue
             dst_arr = self.state["layers"][i][pj][key]
             src_arr = src.state["layers"][i][pj][key]
+            local = _colocated(dst_arr, src_arr)
+            if not local:
+                from repro.meshserve import collectives
             if kind == "recurrent":
-                self.state["layers"][i][pj][key] = _copy_entry(
-                    dst_arr, src_arr, d_slot, s_slot)
+                self.state["layers"][i][pj][key] = (
+                    _copy_entry(dst_arr, src_arr, d_slot, s_slot) if local
+                    else collectives.pull_entry(dst_arr, src_arr,
+                                                dst_slot, src_slot))
                 continue
             if n_rows <= 0:
                 continue
             cap = dst_arr.shape[2]
             pos = jnp.asarray([p % cap for p in range(lo, hi)], jnp.int32)
-            self.state["layers"][i][pj][key] = _copy_rows(
-                dst_arr, src_arr, d_slot, s_slot, pos)
+            self.state["layers"][i][pj][key] = (
+                _copy_rows(dst_arr, src_arr, d_slot, s_slot, pos) if local
+                else collectives.pull_rows(dst_arr, src_arr,
+                                           dst_slot, src_slot, pos))
         return self.costs.mirror_bytes(max(0, to_line - from_line))
 
     # -- prefix adoption (one-time window fill) --------------------------------

@@ -116,6 +116,13 @@ def main():
                     help="number of shared prefix groups (system prompts)")
     ap.add_argument("--prefix-len", type=int, default=64,
                     help="declared shared-prefix length in tokens")
+    ap.add_argument("--mesh-tp", type=int, default=None,
+                    help="tensor-parallel width per instance: carve the "
+                         "host's devices into per-instance mesh slices "
+                         "(repro.meshserve) and shard params + KV pool; "
+                         "needs instances*tp devices (on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-steps", type=int, default=2000)
     ap.add_argument("--no-redundancy", action="store_true")
@@ -144,9 +151,10 @@ def main():
         prefix_cache_blocks=args.prefix_cache_blocks,
         redundancy=not args.no_redundancy, reduced=not args.full_config,
         seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo,
-        fleet=build_fleet(args))
+        fleet=build_fleet(args), mesh_tp=args.mesh_tp)
     print(f"serving {args.arch} on {args.instances} instances "
           f"with policy={args.policy}, redundancy={spec.redundancy}"
+          + (f", mesh_tp={args.mesh_tp}" if args.mesh_tp else "")
           + (", prefix_cache=on" if args.prefix_cache else ""))
     print(traffic.describe())
     report = serve(spec)

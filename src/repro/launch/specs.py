@@ -136,11 +136,14 @@ def pick_layout(cfg: ModelConfig, shape: InputShape) -> str:
 
 
 def param_pspecs(cfg: ModelConfig, params_shape, *, mode: str,
-                 multi_pod: bool = False, layout: str = "tp"):
+                 multi_pod: bool = False, layout: str = "tp",
+                 model_n: int = 16):
     """mode: "serve" (TP only, replicated over data) or "train" (TP+FSDP).
     layout "fsdp": no tensor parallelism — every matrix shards one dim over
-    ALL mesh axes combined (pure FSDP/ZeRO-3 data parallel)."""
-    model_n = 16
+    ALL mesh axes combined (pure FSDP/ZeRO-3 data parallel).
+    ``model_n`` is the model-axis width the divisibility rules check
+    against — 16 on the fixed production mesh; a mesh-serving slice
+    (repro.meshserve) passes its own TP width."""
     fsdp_ax = ("pod", "data") if multi_pod else ("data",)
     fsdp_n = _axes_size(multi_pod)
 
@@ -224,10 +227,10 @@ def param_pspecs(cfg: ModelConfig, params_shape, *, mode: str,
 
 
 def state_pspecs(cfg: ModelConfig, state_shape, shape: InputShape,
-                 *, long_context: bool, multi_pod: bool = False):
+                 *, long_context: bool, multi_pod: bool = False,
+                 model_n: int = 16):
     """KV caches: batch on data when divisible; otherwise (long_500k, B=1)
     shard the KV sequence dim on data (sharded-KV decode combine)."""
-    model_n = 16
     b_ax = ("pod", "data") if multi_pod else ("data",)
     b_n = _axes_size(multi_pod)
     B = shape.global_batch

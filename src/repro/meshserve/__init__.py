@@ -1,0 +1,22 @@
+"""Mesh serving: tensor-parallel paged decode + device-to-device
+redundancy collectives (see docs/ARCHITECTURE.md, "Mesh serving").
+
+One host becomes a multi-instance pod: :func:`carve_slices` cuts the
+device list into per-instance ``("model",)`` meshes, :func:`shard_params`
+/ :func:`shard_store` place an engine's replica and KV pool on its
+slice, and the :mod:`collectives` primitives move mirror/stream bytes
+between slices device-to-device (counted by :data:`STATS`).
+:class:`MeshPlacement` bundles the slices with the heterogeneous
+``InstanceSpec``s that price them on both backends.
+"""
+from repro.meshserve.collectives import (STATS, TransferStats,
+                                         device_transfer, same_devices)
+from repro.meshserve.placement import MeshPlacement
+from repro.meshserve.pool import shard_params, shard_store
+from repro.meshserve.topology import MeshError, MeshSlice, carve_slices
+
+__all__ = [
+    "MeshError", "MeshPlacement", "MeshSlice", "STATS", "TransferStats",
+    "carve_slices", "device_transfer", "same_devices", "shard_params",
+    "shard_store",
+]

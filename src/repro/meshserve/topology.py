@@ -1,0 +1,77 @@
+"""Mesh carving: one host's devices become per-instance TP slices.
+
+An AcceLLM *instance* is n accelerators under tensor parallelism (paper
+§4.2.3: 4 accelerators, TP=4, one full model replica per instance).  This
+module carves the flat device list into disjoint one-axis ``("model",)``
+meshes — one :class:`MeshSlice` per instance — so a single host (or a
+CPU test forced to 8 devices via ``--xla_force_host_platform_device_count``)
+serves as a multi-instance pod.  Slices may be *heterogeneous*: the
+paper's eval mixes H100 and Ascend 910B2 pods, which here become slices
+of different widths priced by different ``InstanceSpec``s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+class MeshError(RuntimeError):
+    """Raised when the host cannot back the requested slice shapes."""
+
+
+@dataclass(frozen=True)
+class MeshSlice:
+    """One instance's devices as a 1-axis ``("model",)`` mesh."""
+
+    mesh: Mesh
+    index: int
+
+    @property
+    def tp(self) -> int:
+        return int(self.mesh.shape["model"])
+
+    @property
+    def devices(self) -> Tuple:
+        return tuple(self.mesh.devices.flat)
+
+    def model_axis_for(self, cfg) -> Optional[str]:
+        """The mesh axis the model's sharding constraints may use for
+        this config — ``None`` when the head count does not divide the
+        slice (constraints then replicate; params/state still shard any
+        dim that IS divisible, GSPMD reshards around them)."""
+        return "model" if cfg.num_heads % self.tp == 0 else None
+
+
+def carve_slices(shapes: Union[int, Sequence[int]],
+                 n_instances: Optional[int] = None,
+                 devices: Optional[Sequence] = None) -> Tuple[MeshSlice, ...]:
+    """Carve ``devices`` (default: all of ``jax.devices()``) into
+    consecutive disjoint slices.  ``shapes`` is one TP width applied to
+    every instance (then ``n_instances`` is required) or an explicit
+    per-instance width list (heterogeneous pods)."""
+    if isinstance(shapes, int):
+        if n_instances is None:
+            raise MeshError("carve_slices(tp_int) needs n_instances")
+        widths: List[int] = [shapes] * n_instances
+    else:
+        widths = [int(w) for w in shapes]
+    if any(w < 1 for w in widths):
+        raise MeshError(f"slice widths must be >= 1, got {widths}")
+    devs = list(devices if devices is not None else jax.devices())
+    need = sum(widths)
+    if need > len(devs):
+        raise MeshError(
+            f"host has {len(devs)} devices but the slices need {need} "
+            f"(widths {widths}); force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    out, lo = [], 0
+    for i, w in enumerate(widths):
+        mesh = Mesh(np.asarray(devs[lo:lo + w]), ("model",))
+        out.append(MeshSlice(mesh=mesh, index=i))
+        lo += w
+    return tuple(out)

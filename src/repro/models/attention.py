@@ -323,7 +323,12 @@ def gqa_forward(
         # live line blocks through its block table — decode reads
         # O(resident lines), not O(num_slots * kv_capacity).
         assert state is not None and t is not None and S == 1
+        from repro import sharding
         from repro.kernels.decode_attention import paged_decode_attention
+        # mesh serving (repro.meshserve): pin the compacted query batch's
+        # head dim to the slice's model axis so the per-head block gather
+        # below stays shard-local (no-op without an active mesh)
+        q = sharding.constrain(q, "batch", None, "model", None)
         cap = state["k"].shape[1]
         pos = t % cap
         kc = state["k"].at[paged.slots, pos].set(k[:, 0])

@@ -1,8 +1,8 @@
 """Live-engine executor: drives real ``InstanceEngine``s under any
 ``SchedulerPolicy``.
 
-This replaces the scheduling logic that used to be hardwired into
-``repro.core.cluster.AcceLLMCluster``: the executor owns the mechanics
+This replaces the scheduling logic that used to be hardwired into the
+retired ``AcceLLMCluster`` facade: the executor owns the mechanics
 (engines, slots, the iteration clock, placement bookkeeping) and asks the
 policy kernel for every decision, applying the declarative actions it
 returns.  The same kernel object drives the discrete-event simulator via
@@ -74,6 +74,12 @@ class LiveInstanceView:
 
     def block_lines(self) -> int:
         return self._eng.store.block_lines
+
+    def spec(self):
+        # hardware identity of this instance's mesh slice (None when
+        # the cluster runs unplaced / the instance joined past the pod)
+        specs = self._c.instance_specs
+        return specs[self._index] if self._index < len(specs) else None
 
     def primary_bytes(self) -> float:
         store = self._eng.store
@@ -190,7 +196,8 @@ class LiveCluster:
                  fuse_decode_steps: int = 1,
                  prefix_cache: bool = False,
                  prefix_cache_blocks: Optional[int] = None,
-                 fleet: Optional["FleetController"] = None):
+                 fleet: Optional["FleetController"] = None,
+                 mesh=None):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
             policy = get_policy(policy)
@@ -200,6 +207,20 @@ class LiveCluster:
         self.cfg = cfg
         self.policy = policy
         self._params = params
+        #: pod layout (repro.meshserve.MeshPlacement): carves the host's
+        #: devices into per-instance TP slices and carries the — possibly
+        #: heterogeneous — InstanceSpecs the views expose.  ``None`` runs
+        #: every engine on the default device, as before.
+        self.mesh = mesh
+        if mesh is not None and mesh.n_instances != n_instances:
+            raise ValueError(
+                f"mesh placement has {mesh.n_instances} slices for "
+                f"{n_instances} instances")
+        #: per-instance hardware spec visible through the policy views
+        #: (``InstanceView.spec()``); None where nothing was declared
+        self.instance_specs: List[Optional[object]] = [
+            mesh.spec_for(i) if mesh is not None else None
+            for i in range(n_instances)]
         # join events build replacement engines with the original shape
         self._engine_kwargs = dict(
             num_slots=num_slots, kv_capacity=kv_capacity,
@@ -211,7 +232,9 @@ class LiveCluster:
                            instance_id=i, temperature=temperature,
                            eos_token=eos_token, block_lines=block_lines,
                            prefix_cache=prefix_cache,
-                           prefix_cache_blocks=prefix_cache_blocks)
+                           prefix_cache_blocks=prefix_cache_blocks,
+                           mesh=mesh.slice_for(i) if mesh is not None
+                           else None)
             for i in range(n_instances)
         ]
         #: fleet state per instance index (repro.fleet); dead engines
@@ -632,9 +655,14 @@ class LiveCluster:
             self.draining[idx] = False
         else:
             idx = len(self.engines)
+            # autoscaled joins land past the carved pod: unsharded,
+            # default hardware (MeshPlacement.slice_for returns None there)
+            sl = self.mesh.slice_for(idx) if self.mesh is not None else None
             self.engines.append(
                 InstanceEngine(self.cfg, self._params, instance_id=idx,
-                               **self._engine_kwargs))
+                               mesh=sl, **self._engine_kwargs))
+            self.instance_specs.append(
+                self.mesh.spec_for(idx) if self.mesh is not None else None)
             self._pending.append([])
             self._chunking.append([])
             self.alive.append(True)

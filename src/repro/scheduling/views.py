@@ -74,6 +74,16 @@ class InstanceView(Protocol):
         request's resident lines up to it."""
         ...
 
+    def spec(self):
+        """Hardware identity of this instance
+        (``repro.sim.devices.InstanceSpec`` or None when undeclared).
+        Pods may be heterogeneous — H100-class and 910B2-class slices in
+        one cluster — so policies that weigh transfer or decode cost
+        against hardware should read per-instance ``intra_link_gbps`` /
+        ``inter_link_gbps`` / ``n_devices`` here rather than assume one
+        device model."""
+        ...
+
     def decode_remaining(self) -> Mapping[int, int]:
         """Remaining token budget per resident decode request — the
         planner's fused-span cap (a fused block never runs past the

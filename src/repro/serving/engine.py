@@ -27,6 +27,7 @@ so prefill and decode are never co-scheduled on one instance).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import (TYPE_CHECKING, Dict, Iterable, List, Mapping, Optional,
                     Tuple)
@@ -55,7 +56,8 @@ class InstanceEngine:
                  seed: int = 0, block_lines: Optional[int] = None,
                  paged_decode: Optional[bool] = None,
                  prefix_cache: bool = False,
-                 prefix_cache_blocks: Optional[int] = None):
+                 prefix_cache_blocks: Optional[int] = None,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -65,6 +67,18 @@ class InstanceEngine:
         self.eos_token = eos_token
         self.store = PagedStore(cfg, num_slots, kv_capacity,
                                 block_lines=block_lines)
+        #: mesh slice backing this instance (repro.meshserve.MeshSlice):
+        #: params and the KV pool are committed to its devices and every
+        #: model dispatch runs under its sharding context — tensor
+        #: parallelism within the instance, with redundancy traffic to
+        #: other instances riding the cross-slice collectives.  ``None``
+        #: keeps the seed single-device behavior.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.meshserve import shard_params, shard_store
+            self.params = shard_params(cfg, params, mesh)
+            shard_store(self.store, mesh)
+            self._model_axis = mesh.model_axis_for(cfg)
         self.lengths = np.zeros((num_slots,), np.int32)
         self.last_tokens = np.zeros((num_slots,), np.int32)
         self.slot_req: Dict[int, Request] = {}
@@ -143,6 +157,18 @@ class InstanceEngine:
     @state.setter
     def state(self, value):
         self.store.state = value
+
+    def _mesh_ctx(self):
+        """Sharding context for this engine's model dispatches.  On a
+        mesh slice the trace-time constraints bind to the slice's mesh
+        (no batch axis — a serving batch stays whole per instance, only
+        heads split); single-device engines get a no-op.  The jits are
+        per-engine, so each traces exactly once under its own slice."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro import sharding
+        return sharding.use_mesh(self.mesh.mesh, batch_axes=(),
+                                 model_axis=self._model_axis)
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -356,7 +382,8 @@ class InstanceEngine:
         window = (bucket_len(req.prompt_len, cap=self.kv_capacity)
                   if self._attn_only and not extra else self.kv_capacity)
         fresh = init_state(self.cfg, 1, window)
-        logits, fresh = self._jit_prefill(self.params, batch, fresh)
+        with self._mesh_ctx():
+            logits, fresh = self._jit_prefill(self.params, batch, fresh)
         self._key, sub = jax.random.split(self._key)
         tok = int(sample_slots(logits, sub, jnp.asarray([slot]),
                                self.temperature)[0])
@@ -382,8 +409,9 @@ class InstanceEngine:
             toks[i, :it.prompt_len] = np.asarray(it.req.prompt_tokens)[0]
             lens[i] = it.prompt_len
         fresh = init_state(self.cfg, Bp, bucket)
-        logits, fresh = self._jit_prefill_batched(
-            self.params, jnp.asarray(toks), fresh, jnp.asarray(lens))
+        with self._mesh_ctx():
+            logits, fresh = self._jit_prefill_batched(
+                self.params, jnp.asarray(toks), fresh, jnp.asarray(lens))
         self._key, sub = jax.random.split(self._key)
         # pad rows fold in an unused sentinel slot; their draws are
         # discarded and never perturb a real slot's stream
@@ -440,8 +468,9 @@ class InstanceEngine:
             assert self.prefilling.get(slot) is req
         toks = req.prompt_tokens[:, it.start:it.end]
         sub = self.store.extract_slot(slot)
-        logits, sub = self._jit_prefill_chunk(self.params, toks, sub,
-                                              history=it.start)
+        with self._mesh_ctx():
+            logits, sub = self._jit_prefill_chunk(self.params, toks, sub,
+                                                  history=it.start)
         self.store.merge_slot_rows(slot, sub, it.start, it.end)
         if not it.completes:
             # cursor over the KV ledger: lines materialized so far.  The
@@ -471,8 +500,9 @@ class InstanceEngine:
                     for slot, toks in self.decode_multi(steps=1).items()}
         tokens = jnp.asarray(self.last_tokens)[:, None]
         t = jnp.asarray(self.lengths)
-        logits, self.store.state = self._jit_decode(
-            self.params, tokens, self.store.state, t)
+        with self._mesh_ctx():
+            logits, self.store.state = self._jit_decode(
+                self.params, tokens, self.store.state, t)
         self._key, sub = jax.random.split(self._key)
         # per-slot keys (fold_in by slot index == row index here) keep
         # sampled tokens invariant to batch compaction on the paged path
@@ -547,10 +577,11 @@ class InstanceEngine:
                                                blocks)))
         tables = self._tables_cache[1]
         key_chain, keys = decode_keys(self._key, steps)
-        toks_all, self.store.state, emitted = self._jit_decode_multi(
-            self.params, jnp.asarray(self.last_tokens[slots])[:, None],
-            self.store.state, jnp.asarray(t0), jnp.asarray(slots),
-            tables, jnp.asarray(budget), keys)
+        with self._mesh_ctx():
+            toks_all, self.store.state, emitted = self._jit_decode_multi(
+                self.params, jnp.asarray(self.last_tokens[slots])[:, None],
+                self.store.state, jnp.asarray(t0), jnp.asarray(slots),
+                tables, jnp.asarray(budget), keys)
         toks_np = np.asarray(toks_all)
         emitted = np.asarray(emitted)
         self.host_syncs += 1

@@ -156,11 +156,22 @@ class Policy:
 
 
 class Simulator:
-    def __init__(self, policy: Policy, perf: PerfModel, n_instances: int,
+    def __init__(self, policy: Policy, perf, n_instances: int,
                  max_batch: int = 64, block_lines: int = 16,
                  prefix_cache: bool = False,
                  prefix_cache_blocks: Optional[int] = None):
-        self.perf = perf
+        # ``perf`` is one PerfModel for a homogeneous pod, or a sequence
+        # of n_instances models for a heterogeneous one (e.g. H100-class
+        # and 910B2-class slices scheduled by the same kernel)
+        if isinstance(perf, (list, tuple)):
+            if len(perf) != n_instances:
+                raise ValueError(
+                    f"{len(perf)} perf models for {n_instances} instances")
+            perfs = list(perf)
+        else:
+            perfs = [perf] * n_instances
+        # default model: fleet joins past the pod land on this hardware
+        self.perf = perfs[0] if perfs else perf
         # remembered so fleet joins build replacement instances with the
         # original shape (mirrors LiveCluster._engine_kwargs)
         self.max_batch = max_batch
@@ -168,7 +179,7 @@ class Simulator:
         self.prefix_cache = prefix_cache
         self.prefix_cache_blocks = prefix_cache_blocks
         self.fleet = None            # FleetController of the active run
-        self.instances = [SimInstance(i, perf, max_batch, block_lines)
+        self.instances = [SimInstance(i, perfs[i], max_batch, block_lines)
                           for i in range(n_instances)]
         if prefix_cache:
             for inst in self.instances:
@@ -226,8 +237,9 @@ class Simulator:
         if plan is None:
             return
         # ONE cost entry point for every iteration shape (ISSUE 4
-        # acceptance): the plan the adapter compiled is priced as-is.
-        dur = self.perf.plan_time(plan)
+        # acceptance): the plan the adapter compiled is priced as-is,
+        # on the hardware of the instance that runs it.
+        dur = inst.perf.plan_time(plan)
         inst.busy = True
         inst.busy_time += dur
         inst._running = (plan, tuple(inst.decode_batch), self.now)

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -42,6 +43,16 @@ class InstanceSpec:
     #: token — the amortization the live engine's ``decode_multi`` scan
     #: realizes.  0 keeps the seed cost model (pure roofline).
     dispatch_s: float = 0.0
+    #: per-link bandwidths of the mesh slice backing this instance
+    #: (repro.meshserve): *intra*-slice is the NVLink/ICI-class fabric
+    #: the TP collectives ride; *inter*-slice is the network link that
+    #: carries MirrorSync / StreamState traffic between instances.
+    #: ``None`` falls back to the device's ``link_gbps`` for both, so
+    #: the seed cost model is unchanged unless a spec says otherwise.
+    #: This is the ONE home of link pricing — benchmarks and the sim
+    #: must read bandwidths from here, never hardcode them.
+    intra_link_gbps: Optional[float] = None
+    inter_link_gbps: Optional[float] = None
 
     @property
     def tflops(self) -> float:
@@ -56,5 +67,21 @@ class InstanceSpec:
         return self.device.hbm_bw_gbps * 1e9 * self.n_devices * self.device.bw_eff
 
     @property
+    def intra_link_bw(self) -> float:
+        """Bytes/s across devices WITHIN this instance's mesh slice."""
+        g = (self.intra_link_gbps if self.intra_link_gbps is not None
+             else self.device.link_gbps)
+        return g * 1e9
+
+    @property
+    def inter_link_bw(self) -> float:
+        """Bytes/s between this instance's slice and another's."""
+        g = (self.inter_link_gbps if self.inter_link_gbps is not None
+             else self.device.link_gbps)
+        return g * 1e9
+
+    @property
     def link_bw(self) -> float:
-        return self.device.link_gbps * 1e9
+        """Instance-to-instance bandwidth (mirror/stream traffic rides
+        the inter-slice link)."""
+        return self.inter_link_bw

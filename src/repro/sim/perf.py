@@ -130,7 +130,21 @@ class PerfModel:
         t_mem = (self.active_weight_bytes + kv) / self.inst.hbm_bw
         flops = 2.0 * self.cfg.param_count(active_only=True) * len(lengths)
         t_compute = flops / (self.inst.tflops * 1e12)
-        return max(t_mem, t_compute)
+        return max(max(t_mem, t_compute),
+                   self.tp_collective_time(len(lengths)))
+
+    def tp_collective_time(self, batch: int) -> float:
+        """Per-step tensor-parallel all-reduce over the slice's intra
+        fabric (ring: ``2 (n-1)/n`` activation bytes per layer).  Priced
+        ONLY when a spec declares ``intra_link_gbps`` explicitly — the
+        seed model treats the TP fabric as free, and every existing
+        snapshot must stay bit-identical unless a spec opts in."""
+        n = self.inst.n_devices
+        if self.inst.intra_link_gbps is None or n <= 1 or batch <= 0:
+            return 0.0
+        act = batch * self.cfg.d_model * DTYPE_BYTES
+        layers = len(self.cfg.block_pattern)
+        return layers * 2.0 * (n - 1) / n * act / self.inst.intra_link_bw
 
     # -- step plans (THE simulator cost entry point) --------------------------
     def plan_time(self, plan) -> float:
@@ -184,12 +198,15 @@ class PerfModel:
                 total += t
             return total
         if isinstance(plan, TransferPlan):
+            # the fabric the bytes ride: mirror/stream between instances
+            # defaults to the inter-slice link; an intra-slice plan
+            # (same-host mesh slices) prices at the TP fabric's rate
+            bw = self.link_bw_for(plan.link)
             if isinstance(plan.action, StreamState):
                 return self.kv_transfer_time(
-                    plan.lines, overlap_layers=plan.overlap_layers)
+                    plan.lines, overlap_layers=plan.overlap_layers, bw=bw)
             if isinstance(plan.action, MirrorSync):
-                return (self.line_costs.mirror_bytes(plan.lines)
-                        / self.inst.link_bw)
+                return self.line_costs.mirror_bytes(plan.lines) / bw
             return 0.0  # PromoteReplica / EvictReplica: zero-cost flips
         raise TypeError(f"not a step plan: {plan!r}")
 
@@ -197,14 +214,21 @@ class PerfModel:
     def kv_bytes(self, length: int) -> float:
         return state_bytes_at(self.cfg, length, DTYPE_BYTES)
 
-    def kv_transfer_time(self, length: int, *, overlap_layers: bool = False
-                         ) -> float:
+    def kv_transfer_time(self, length: int, *, overlap_layers: bool = False,
+                         bw: float | None = None) -> float:
         """Whole-state transfer between instances. With per-layer streaming
         (AcceLLM §4.2.4) only the last layer's worth is visible latency."""
-        t = self.kv_bytes(length) / self.inst.link_bw
+        t = self.kv_bytes(length) / (self.inst.link_bw if bw is None else bw)
         if overlap_layers:
             return t / max(1, len(self.cfg.block_pattern))
         return t
+
+    def link_bw_for(self, link: str) -> float:
+        """Bandwidth (bytes/s) of the named fabric — ``"inter"`` for the
+        instance-to-instance network, ``"intra"`` for the in-slice TP
+        link (``TransferPlan.link``)."""
+        return (self.inst.intra_link_bw if link == "intra"
+                else self.inst.inter_link_bw)
 
     # per-step mirror traffic is priced by the KV-store ledger:
     # SimStore.mirror_bytes_per_step (== LineCosts.mirror_bytes(1) per

@@ -107,6 +107,11 @@ class SimInstanceView:
     def block_lines(self) -> int:
         return self._i.block_lines
 
+    def spec(self):
+        # the hardware this SimInstance is priced on (heterogeneous
+        # pods carry a different InstanceSpec per instance)
+        return self._i.perf.inst
+
     def primary_bytes(self) -> float:
         costs = self._i.store.costs
         return sum(costs.bytes_at(r.total_len)
@@ -254,7 +259,7 @@ class KernelPolicy(Policy):
             return None
         lengths = tuple(sorted(r.total_len
                                for r in inst.decode_batch.values()))
-        t1 = self.sim.perf.plan_time(DecodePlan(
+        t1 = inst.perf.plan_time(DecodePlan(
             inst.iid, lengths=lengths, block_lines=inst.block_lines))
         if t1 <= 0:
             return None
@@ -613,7 +618,7 @@ class SplitwisePolicy(KernelPolicy):
                                                       r)
             act = (actions[0] if actions
                    else StreamState(r.rid, src=inst.iid, dst=inst.iid))
-            dt = self.sim.perf.plan_time(TransferPlan(
+            dt = inst.perf.plan_time(TransferPlan(
                 inst.iid, act, lines=r.prompt_len, overlap_layers=False))
             # the request leaves for its decode instance: the prefill
             # instance's cache still indexes the prompt head it computed

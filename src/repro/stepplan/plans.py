@@ -144,6 +144,12 @@ class TransferPlan:
     #: per-layer streamed transfer (§4.2.4): only the last layer's worth
     #: is exposed latency.
     overlap_layers: bool = False
+    #: which fabric the bytes ride (repro.meshserve): ``"inter"`` is the
+    #: instance-to-instance network link (mirror/stream between mesh
+    #: slices); ``"intra"`` is the NVLink/ICI-class link within one
+    #: slice.  The cost model picks the matching ``InstanceSpec``
+    #: bandwidth; every transfer the planner emits today is inter-slice.
+    link: str = "inter"
 
 
 StepPlan = Union[PrefillPlan, DecodePlan, MixedPlan, TransferPlan]

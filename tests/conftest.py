@@ -1,8 +1,24 @@
+"""Suite-wide JAX setup.
+
+The mesh-serving tests need a multi-device host, and the device-count
+override must land in ``XLA_FLAGS`` BEFORE the jax backend initializes —
+so it is appended here at conftest import time (pytest imports conftest
+first; nothing has touched a device yet).  Forcing host platform devices
+only splits the CPU into N independent XLA devices; single-device tests
+still place everything on device 0 and are unaffected.  Tests that need
+the full mesh take the ``mesh8`` fixture, which skips cleanly when the
+platform ignored the flag (e.g. a real accelerator is attached).
+"""
+import os
+
+_FORCE = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + _FORCE).strip()
+
 import jax
 import pytest
-
-# Smoke tests and benches see the single real CPU device; ONLY the dry-run
-# launcher sets xla_force_host_platform_device_count (per its module docs).
 
 jax.config.update("jax_enable_x64", False)
 
@@ -10,3 +26,13 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """The forced 8-device CPU pod; skips where devices can't be forced."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices "
+                    f"(XLA_FLAGS={os.environ.get('XLA_FLAGS', '')!r} "
+                    f"gave {jax.device_count()})")
+    return jax.devices()[:8]

@@ -7,8 +7,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
-from repro.core import AcceLLMCluster
 from repro.models import init_params
+from repro.scheduling.accellm import AcceLLMScheduler
+from repro.scheduling.live import LiveCluster
 from repro.serving import InstanceEngine, Request
 
 
@@ -17,6 +18,12 @@ def setup():
     cfg = get_config("starcoder2-3b").reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
     return cfg, params
+
+
+def _mk_cluster(cfg, params, n_instances, num_slots, kv_capacity=128,
+                redundancy=True):
+    return LiveCluster(cfg, params, n_instances, num_slots, kv_capacity,
+                       policy=AcceLLMScheduler(redundancy=redundancy))
 
 
 def _mk_requests(cfg, n, seed=3):
@@ -43,8 +50,7 @@ def _single_engine_reference(cfg, params, req):
 
 def test_all_requests_finish(setup):
     cfg, params = setup
-    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=6,
-                             kv_capacity=128)
+    cluster = _mk_cluster(cfg, params, n_instances=2, num_slots=6)
     reqs = _mk_requests(cfg, 8)
     for r in reqs:
         cluster.submit(r)
@@ -61,8 +67,7 @@ def test_migration_preserves_greedy_tokens(setup):
     cfg, params = setup
     reqs = _mk_requests(cfg, 6, seed=11)
     expected = {r.rid: _single_engine_reference(cfg, params, r) for r in reqs}
-    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=8,
-                             kv_capacity=128)
+    cluster = _mk_cluster(cfg, params, n_instances=2, num_slots=8)
     for r in reqs:
         cluster.submit(r)
     done = cluster.run(max_steps=300)
@@ -76,8 +81,8 @@ def test_migration_preserves_greedy_tokens(setup):
 
 def test_no_redundancy_mode(setup):
     cfg, params = setup
-    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=6,
-                             kv_capacity=128, redundancy=False)
+    cluster = _mk_cluster(cfg, params, n_instances=2, num_slots=6,
+                          redundancy=False)
     reqs = _mk_requests(cfg, 4)
     for r in reqs:
         cluster.submit(r)
@@ -89,23 +94,21 @@ def test_no_redundancy_mode(setup):
 
 def test_four_instances_two_pairs(setup):
     cfg, params = setup
-    cluster = AcceLLMCluster(cfg, params, n_instances=4, num_slots=4,
-                             kv_capacity=128)
+    cluster = _mk_cluster(cfg, params, n_instances=4, num_slots=4)
     reqs = _mk_requests(cfg, 10, seed=5)
     for r in reqs:
         cluster.submit(r)
     done = cluster.run(max_steps=400)
     assert len(done) == 10
-    # routing used both pairs
-    used = [len(p.placements) for p in cluster.pairs]
     assert cluster.stats["prefills"] == 10
+    # every placement names a live engine slot on one of the two pairs
+    assert all(pl.primary[0] < 4 for pl in cluster.placements.values())
 
 
 def test_slot_accounting_invariants(setup):
     """No slot is ever both primary and replica; bookkeeping stays closed."""
     cfg, params = setup
-    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=5,
-                             kv_capacity=128)
+    cluster = _mk_cluster(cfg, params, n_instances=2, num_slots=5)
     reqs = _mk_requests(cfg, 7, seed=9)
     for r in reqs:
         cluster.submit(r)
@@ -115,13 +118,11 @@ def test_slot_accounting_invariants(setup):
         for eng in cluster.engines:
             overlap = set(eng.slot_req) & set(eng.replica_of)
             assert not overlap, f"slot is both primary and replica: {overlap}"
-        for pair in cluster.pairs:
-            for rid, pl in pair.placements.items():
-                inst, slot = pl.primary
-                eng = pair.engines()[inst]
-                assert eng.slot_req[slot].rid == rid
-                if pl.replica is not None:
-                    r_inst, r_slot = pl.replica
-                    assert pair.engines()[r_inst].replica_of.get(r_slot) \
-                        is not None
+        for rid, pl in cluster.placements.items():
+            inst, slot = pl.primary
+            assert cluster.engines[inst].slot_req[slot].rid == rid
+            if pl.replica is not None:
+                r_inst, r_slot = pl.replica
+                assert cluster.engines[r_inst].replica_of.get(r_slot) \
+                    is not None
         steps += 1

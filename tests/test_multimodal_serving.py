@@ -4,15 +4,16 @@ import jax
 import pytest
 
 from repro.configs import get_config
-from repro.core import AcceLLMCluster
 from repro.models import init_params
+from repro.scheduling.accellm import AcceLLMScheduler
+from repro.scheduling.live import LiveCluster
 from repro.serving import Request
 
 
 def _serve(cfg, extras_fn, n=4):
     params = init_params(jax.random.PRNGKey(0), cfg)
-    cluster = AcceLLMCluster(cfg, params, n_instances=2, num_slots=6,
-                             kv_capacity=128)
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=6,
+                          kv_capacity=128, policy=AcceLLMScheduler())
     key = jax.random.PRNGKey(3)
     for i in range(n):
         plen = 6 + i
