@@ -16,8 +16,8 @@ from typing import Callable, Optional
 
 from repro.configs import get_config
 from repro.sim import (AcceLLMPolicy, ASCEND_910B2, H100, InstanceSpec,
-                       PerfModel, Simulator, SplitwisePolicy, VLLMPolicy,
-                       summarize)
+                       PerfModel, Simulator, SplitwisePolicy, ULBPolicy,
+                       VLLMPolicy, summarize)
 from repro.workloads import SLO, WorkloadSpec, table2_spec
 
 CFG = get_config("llama2-70b")            # the paper's eval model (§5.2)
@@ -63,7 +63,8 @@ def run_sim(policy, workload, rate, duration, n_instances, device=H100,
     # score ALL offered traffic (stragglers count as unfinished / SLO
     # misses) over the time the cluster actually ran
     elapsed = max(sim.now, float(duration))
-    return sim, summarize(sim.submitted, n_instances, elapsed, slo=slo)
+    return sim, summarize(sim.submitted, n_instances, elapsed, slo=slo,
+                          sched_us_per_iter=sim.sched_us_per_iter)
 
 
 def timed(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:
@@ -84,6 +85,7 @@ POLICIES = {
     "vllm": VLLMPolicy,
     "splitwise": lambda: SplitwisePolicy(1),
     "accellm": AcceLLMPolicy,
+    "ulb": ULBPolicy,
 }
 
 
@@ -93,4 +95,5 @@ def policies_for(n_instances: int):
         "vllm": VLLMPolicy(),
         "splitwise": SplitwisePolicy(n_prefill),
         "accellm": AcceLLMPolicy(),
+        "ulb": ULBPolicy(),
     }

@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.bench_fleet",           # fault injection: failover vs re-prefill
     "benchmarks.bench_prefix",          # prefix cache: reuse-probability sweep
     "benchmarks.bench_mesh",            # TP mesh decode + collective mirror
+    "benchmarks.bench_scale",           # vectorized scheduler + ULB shootout
 ]
 
 

@@ -74,6 +74,9 @@ class ServeSpec:
     #: heterogeneous pod: one InstanceSpec per instance (slice widths
     #: follow ``spec.n_devices``); overrides mesh_tp's uniform carving
     mesh_specs: Optional[Sequence] = None
+    #: sample the observability timeline every N scheduling iterations
+    #: (1 = every iteration); long replays keep O(n/stride) memory
+    timeline_stride: int = 1
     # legacy request sampling (used when `traffic` is not given)
     workload: str = "mixed"
     n_requests: int = 16
@@ -127,6 +130,12 @@ class ServeReport:
     @property
     def timeline(self):
         return self.cluster.timeline
+
+    @property
+    def sched_us_per_iter(self) -> float:
+        """Mean wall-clock scheduler overhead per iteration (µs) —
+        policy + planner decisions, excluding engine execution."""
+        return self.cluster.sched_us_per_iter
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft() for r in self.finished])
@@ -216,7 +225,8 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
                        fuse_decode_steps=spec.fuse_decode_steps,
                        prefix_cache=spec.prefix_cache,
                        prefix_cache_blocks=spec.prefix_cache_blocks,
-                       fleet=fleet, mesh=mesh)
+                       fleet=fleet, mesh=mesh,
+                       timeline_stride=spec.timeline_stride)
 
 
 def serve(spec: ServeSpec,

@@ -68,6 +68,25 @@ def should_rebalance(items: Sequence[Item], count_trigger: int = 2,
     than bytes_trigger_frac of the total."""
     if not items:
         return False
-    dn, dw = imbalance(items)
-    total_w = sum(it.weight for it in items) or 1.0
-    return dn >= count_trigger or dw / total_w > bytes_trigger_frac
+    n = [0, 0]
+    w = [0.0, 0.0]
+    for it in items:
+        n[it.home] += 1
+        w[it.home] += it.weight
+    return should_rebalance_agg(n[0], n[1], w[0], w[1],
+                                count_trigger, bytes_trigger_frac)
+
+
+def should_rebalance_agg(n0: int, n1: int, w0: float, w1: float,
+                         count_trigger: int = 2,
+                         bytes_trigger_frac: float = 0.2) -> bool:
+    """The :func:`should_rebalance` trigger from per-side aggregates —
+    for callers (the vectorized kernels) that keep counts and byte sums
+    incrementally and only materialize Items once a rebalance fires.
+    Weights are exact integers in float64, so aggregate sums equal the
+    per-item accumulation bit for bit."""
+    if n0 + n1 == 0:
+        return False
+    total_w = (w0 + w1) or 1.0
+    return (abs(n0 - n1) >= count_trigger
+            or abs(w0 - w1) / total_w > bytes_trigger_frac)

@@ -11,13 +11,21 @@ length-independent constant — which is why the balancer weights requests by
 These formulas are consumed through ``repro.kvstore.LineCosts``, the cost
 card both the live ``PagedStore`` and the simulator's ``SimStore`` ledger
 charge from — change them here and every backend reprices identically.
+
+The per-config quantities are memoized: configs are frozen (hashable)
+and these are pure functions of them, yet the simulator prices every
+decode iteration through ``state_bytes_at`` — without the cache the
+walk over ``block_pattern`` dominates million-request replays.
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 from repro.configs.base import ModelConfig
 from repro.models.state import xlstm_dims
 
 
+@lru_cache(maxsize=None)
 def bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
     """KV-cache bytes added per token (attention layers only)."""
     n_attn = sum(1 for b in cfg.block_pattern if b == "attn")
@@ -28,6 +36,7 @@ def bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
     return n_attn * per
 
 
+@lru_cache(maxsize=None)
 def recurrent_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     """Length-independent state that CHANGES every decode step
     (SSM/conv/xLSTM memories).  This is the constant-size per-step mirror
@@ -50,6 +59,7 @@ def recurrent_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     return total
 
 
+@lru_cache(maxsize=None)
 def static_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     """Length-independent state written once at prefill and immutable
     thereafter (enc-dec: cached encoder output + cross K/V).  Streamed
@@ -63,6 +73,7 @@ def static_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     return total
 
 
+@lru_cache(maxsize=None)
 def fixed_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
     """Length-independent state bytes (recurrent memories + enc-dec
     static caches)."""

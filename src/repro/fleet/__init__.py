@@ -9,12 +9,13 @@ decision trace both backends must agree on.
 from repro.fleet.controller import (FailoverPlan, FleetController, Promotion,
                                     reset_for_reprefill, rollback_tokens)
 from repro.fleet.events import (Drain, FixedFleet, FleetEvent, FleetSchedule,
-                                JoinInstance, KillInstance, PoissonFailures,
-                                load_fleet_trace, save_fleet_trace)
+                                FleetTraceReplay, JoinInstance, KillInstance,
+                                PoissonFailures, load_fleet_trace,
+                                save_fleet_trace)
 
 __all__ = [
     "KillInstance", "JoinInstance", "Drain", "FleetEvent",
-    "FleetSchedule", "FixedFleet", "PoissonFailures",
+    "FleetSchedule", "FixedFleet", "FleetTraceReplay", "PoissonFailures",
     "save_fleet_trace", "load_fleet_trace",
     "FleetController", "FailoverPlan", "Promotion",
     "reset_for_reprefill", "rollback_tokens",

@@ -119,21 +119,45 @@ def save_fleet_trace(path, events: Sequence[FleetEvent]) -> int:
     return n
 
 
-def load_fleet_trace(path) -> FixedFleet:
-    """Read a JSONL fleet trace back into a replayable schedule."""
-    events: List[FleetEvent] = []
+def _parse_fleet_record(rec) -> FleetEvent:
     kinds = {"kill": KillInstance, "join": JoinInstance, "drain": Drain}
+    cls = kinds[rec["event"]]
+    instance = rec.get("instance")
+    if instance is not None:
+        instance = int(instance)
+    elif cls is not JoinInstance:
+        raise ValueError(f"{rec['event']} event needs an instance")
+    return cls(float(rec["t"]), instance)
+
+
+@dataclass(frozen=True)
+class FleetTraceReplay(FleetSchedule):
+    """Streams fleet events straight off a JSONL trace file
+    (``load_fleet_trace(path, stream=True)``) — the fleet analogue of
+    ``TraceFileReplay``: each :meth:`events` call re-opens the file and
+    yields one record at a time, never holding the trace in memory."""
+    path: str
+
+    def events(self, rng):
+        with open(self.path) as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                yield _parse_fleet_record(json.loads(line))
+
+
+def load_fleet_trace(path, stream: bool = False):
+    """Read a JSONL fleet trace back into a replayable schedule.  With
+    ``stream=True`` the schedule replays lazily off the file
+    (:class:`FleetTraceReplay`) instead of materializing an event tuple."""
+    if stream:
+        return FleetTraceReplay(str(path))
+    events: List[FleetEvent] = []
     with open(path) as fh:
         for line in fh:
             line = line.strip()
             if not line:
                 continue
-            rec = json.loads(line)
-            cls = kinds[rec["event"]]
-            instance = rec.get("instance")
-            if instance is not None:
-                instance = int(instance)
-            elif cls is not JoinInstance:
-                raise ValueError(f"{rec['event']} event needs an instance")
-            events.append(cls(float(rec["t"]), instance))
+            events.append(_parse_fleet_record(json.loads(line)))
     return FixedFleet(tuple(events))

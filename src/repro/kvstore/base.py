@@ -107,6 +107,9 @@ class BlockLedger:
     _shared_head: Dict[int, int] = field(default_factory=dict)
     #: last copy-on-write swap: (rid, old_block, new_block)
     last_cow: Optional[Tuple[int, int, int]] = None
+    #: running Σ of ``_lines`` values, so ``used_bytes`` is O(1) — the
+    #: balancer reads it per scheduling decision over every instance
+    _tot_lines: int = 0
 
     def __post_init__(self):
         if self.block_lines <= 0:
@@ -229,8 +232,12 @@ class BlockLedger:
 
     def used_bytes(self) -> float:
         """Line-exact resident state bytes (Σ ``state_bytes_at``), the
-        quantity the balancer and admission compare."""
-        return sum(self.costs.bytes_at(n) for n in self._lines.values())
+        quantity the balancer and admission compare.  Computed from the
+        running line total: line counts are exact integers in float64
+        (far below 2**53), so one multiply equals the per-request sum
+        bit for bit — and the call is O(1), not O(resident)."""
+        return (self.costs.line_bytes * self._tot_lines
+                + self.costs.fixed_bytes * len(self._lines))
 
     def can_alloc(self, lines: int) -> bool:
         return self.blocks_for(lines) <= len(self._free)
@@ -273,6 +280,7 @@ class BlockLedger:
         self.tables[rid] = shared + (take[1:] if fixed is not None
                                      else take)
         self._lines[rid] = lines
+        self._tot_lines += lines
         self._synced[rid] = lines if synced is None else synced
         if shared:
             self._shared_head[rid] = min(lines,
@@ -319,6 +327,7 @@ class BlockLedger:
                 grab = self._take(need)
             table.extend(grab)
         self._lines[rid] = new
+        self._tot_lines += n
         return new
 
     def set_lines(self, rid: int, lines: int,
@@ -329,6 +338,7 @@ class BlockLedger:
         if lines > cur:
             return self.append_line(rid, lines - cur, block_ids=block_ids)
         self._lines[rid] = lines
+        self._tot_lines += lines - cur
         return lines
 
     def mark_synced(self, rid: int, line: Optional[int] = None):
@@ -374,7 +384,7 @@ class BlockLedger:
         fixed = self.fixed_block.pop(rid)
         if fixed is not None:
             blocks = [fixed] + blocks
-        self._lines.pop(rid)
+        self._tot_lines -= self._lines.pop(rid)
         self._synced.pop(rid)
         self._shared_head.pop(rid, None)
         return sum(1 for b in blocks if self._decref(b))

@@ -13,9 +13,15 @@ add SLO attainment and goodput to the report.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
-      --instances 4 --requests 16 [--policy accellm|vllm|splitwise|sarathi] \
+      --instances 4 --requests 16 \
+      [--policy accellm|vllm|splitwise|sarathi|ulb] \
       [--no-redundancy] [--workload mixed] [--arrival poisson --rate 0.5 \
       --duration 60] [--slo-ttft 20 --slo-tbt 4]
+
+Every registered policy name is accepted, including the ``-vec``
+variants (``accellm-vec`` / ``vllm-vec`` / ``splitwise-vec`` /
+``ulb-vec``) — on live engines those fall back to the identical scalar
+decision path, so they are interchangeable with the originals.
 """
 from __future__ import annotations
 

@@ -1,0 +1,35 @@
+"""Scale layer: array-backed scheduler state + vectorized policy kernels.
+
+  state    — ArrayClusterState: numpy struct-of-arrays over the sim's
+             request/instance accounting, kept coherent by observing
+             container wrappers; serves the ClusterView/InstanceView
+             protocols so every kernel runs unchanged
+  kernels  — accellm-vec / vllm-vec / splitwise-vec / ulb-vec: the hot
+             route/pair/rebalance loops as argmin/argmax over instance
+             arrays, bit-identical to their scalar kernels
+
+Imports are lazy (PEP 562): ``repro.scheduling.registry`` pulls
+``kernels`` in at its bottom to self-register the vectorized names, and
+``kernels`` imports scheduling submodules — a top-level import here
+would close that loop while either side is still initializing.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "ArrayClusterState": "repro.scale.state",
+    "ArrayClusterView": "repro.scale.state",
+    "ArrayInstanceView": "repro.scale.state",
+    "VectorAcceLLMScheduler": "repro.scale.kernels",
+    "VectorVLLMScheduler": "repro.scale.kernels",
+    "VectorSplitwiseScheduler": "repro.scale.kernels",
+    "VectorULBScheduler": "repro.scale.kernels",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -45,12 +45,7 @@ class AcceLLMScheduler(SchedulerPolicy):
         #: the partner only loses the primary role when it is more than
         #: ``swap_margin`` requests ahead of the prefilling side
         self.swap_margin = swap_margin
-        #: optional decision log (golden-trace consistency tests)
-        self.trace: Optional[list] = None
-
-    def _note(self, *entry):
-        if self.trace is not None:
-            self.trace.append(entry)
+        # decision log: inherited ``trace``/``_note`` (SchedulerPolicy)
 
     # -- routing (§4.2.2) ---------------------------------------------------
     def admissions_per_step(self, cluster: ClusterView) -> int:

@@ -47,6 +47,14 @@ class SchedulerPolicy:
     #: (Sarathi-style); ``None`` disables chunking.  Consumed by the
     #: step planner, which keeps the resumable chunk cursors.
     chunk_tokens: Optional[int] = None
+    #: optional decision log (golden-trace consistency tests; the
+    #: vectorized-kernel equivalence proof in tests/test_scale.py).
+    #: Assign a list to start recording.
+    trace: Optional[list] = None
+
+    def _note(self, *entry):
+        if self.trace is not None:
+            self.trace.append(entry)
 
     # -- routing ------------------------------------------------------------
     def admissions_per_step(self, cluster: ClusterView) -> int:

@@ -32,8 +32,11 @@ class VLLMScheduler(SchedulerPolicy):
         if not pool:
             return None
         # least loaded instance with memory headroom
-        return min(pool, key=lambda v: (v.decode_load() + v.prefill_backlog(),
-                                        v.index)).index
+        target = min(pool, key=lambda v: (v.decode_load()
+                                          + v.prefill_backlog(),
+                                          v.index)).index
+        self._note("route", req.rid, target)
+        return target
 
 
 class SarathiScheduler(VLLMScheduler):
@@ -62,8 +65,11 @@ class SplitwiseScheduler(SchedulerPolicy):
                       if usable(v)]
         if not prefillers:
             return None          # every prefill instance is down/cordoned
-        return min(prefillers,
-                   key=lambda v: (v.prefill_backlog_tokens(), v.index)).index
+        target = min(prefillers,
+                     key=lambda v: (v.prefill_backlog_tokens(),
+                                    v.index)).index
+        self._note("route", req.rid, target)
+        return target
 
     def choose_roles(self, cluster: ClusterView, instance: int) -> str:
         inst = cluster.instances()[instance]
@@ -78,9 +84,11 @@ class SplitwiseScheduler(SchedulerPolicy):
         if not decoders:
             return None          # decode tier down: stay on the prefiller
         # least-loaded decoder, memory headroom as the tiebreaker
-        return min(decoders,
-                   key=lambda v: (v.decode_load() - v.mem_free() * 1e-18,
-                                  v.index)).index
+        target = min(decoders,
+                     key=lambda v: (v.decode_load() - v.mem_free() * 1e-18,
+                                    v.index)).index
+        self._note("target", req.rid, target)
+        return target
 
     def place_after_prefill(self, cluster: ClusterView, instance: int,
                             req: RequestView) -> List[Action]:

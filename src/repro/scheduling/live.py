@@ -197,7 +197,7 @@ class LiveCluster:
                  prefix_cache: bool = False,
                  prefix_cache_blocks: Optional[int] = None,
                  fleet: Optional["FleetController"] = None,
-                 mesh=None):
+                 mesh=None, timeline_stride: int = 1):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
             policy = get_policy(policy)
@@ -281,6 +281,16 @@ class LiveCluster:
         self._submitted: List[Request] = []
         self.undelivered = 0     # source requests never admitted (max_steps)
         self.timeline: List[TimelinePoint] = []
+        #: sample the timeline every N scheduling iterations (1 = every
+        #: iteration) — same knob as the simulator's, so a million-step
+        #: replay keeps O(n/stride) observability memory
+        self.timeline_stride = max(1, timeline_stride)
+        #: wall-clock seconds spent in scheduling decisions (policy +
+        #: planner), excluding engine execution — the live counterpart
+        #: of ``Simulator.sched_time_s``
+        self.sched_time_s = 0.0
+        self.n_iterations = 0
+        self._sched_t0: Optional[float] = None
         self.stats = {"prefills": 0, "decode_steps": 0, "rebalances": 0,
                       "replica_promotions": 0, "replica_evictions": 0,
                       "mirror_syncs": 0, "mirror_bytes": 0.0,
@@ -291,6 +301,21 @@ class LiveCluster:
     @property
     def now(self) -> float:
         return self.clock.now
+
+    @property
+    def sched_us_per_iter(self) -> float:
+        """Mean scheduler overhead per iteration, microseconds."""
+        return self.sched_time_s * 1e6 / max(1, self.n_iterations)
+
+    def _sched_begin(self):
+        import time
+        self._sched_t0 = time.perf_counter()
+
+    def _sched_end(self):
+        import time
+        if self._sched_t0 is not None:
+            self.sched_time_s += time.perf_counter() - self._sched_t0
+            self._sched_t0 = None
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request, extra: Optional[dict] = None, *,
@@ -364,6 +389,11 @@ class LiveCluster:
             self.planner.fuse_horizon = self._fuse_budget()
         view = LiveClusterView(self)
 
+        # scheduling decisions (routing, roles, admission, plan compile)
+        # are timed; engine execution below is not — the same split the
+        # simulator's sched_us_per_iter uses
+        self._sched_begin()
+
         # 1. routing: policy assigns queued requests to instances
         admitted = 0
         limit = self.policy.admissions_per_step(view)
@@ -436,6 +466,7 @@ class LiveCluster:
             if roles[idx] != ROLE_PREFILL or not pf_actions:
                 actions.append(Decode(idx))
         plans = self.planner.compile(actions, view)
+        self._sched_end()
 
         # chunk budget may not have reached every admitted request this
         # iteration: return the unplanned ones to the head of the backlog
@@ -465,8 +496,12 @@ class LiveCluster:
         # 4. post-prefill placement (§4.1.2 streaming / Splitwise
         # transfer), wrapped into transfer plans
         for idx, req in newly:
-            self._apply_transfers(
-                self.policy.place_after_prefill(view, idx, req), view)
+            self._sched_begin()
+            try:
+                acts = self.policy.place_after_prefill(view, idx, req)
+            finally:
+                self._sched_end()
+            self._apply_transfers(acts, view)
 
         ran_steps = 1
         for plan in plans:
@@ -503,12 +538,21 @@ class LiveCluster:
         self._release_finished()
 
         # 6. mirror newly generated lines into replicas (§4.1.2)
-        self._apply_transfers(self.policy.sync(view), view)
+        self._sched_begin()
+        try:
+            sync_acts = self.policy.sync(view)
+        finally:
+            self._sched_end()
+        self._apply_transfers(sync_acts, view)
 
         # 7. pair-level load balancing via replica promotion (§4.1.3)
         if self.policy.requires_pairs:
             for pair_index in range(len(self.engines) // 2):
-                acts = self.policy.rebalance(view, pair_index)
+                self._sched_begin()
+                try:
+                    acts = self.policy.rebalance(view, pair_index)
+                finally:
+                    self._sched_end()
                 self._apply_transfers(acts, view)
                 if acts:
                     self.stats["rebalances"] += 1
@@ -528,6 +572,11 @@ class LiveCluster:
                 self.queue[:0] = stranded
 
         # 9. observability: queue depth + per-phase utilization this iteration
+        # (a fused block IS ran_steps scheduling iterations: the one
+        # scheduling pass amortizes over all of them)
+        self.n_iterations += ran_steps
+        if (self.n_iterations - 1) % self.timeline_stride >= ran_steps:
+            return
         n = len(self.engines)
         busy = prefilled | decoded
         self.timeline.append(TimelinePoint(

@@ -57,3 +57,17 @@ register_policy("accellm", AcceLLMScheduler)
 register_policy("vllm", VLLMScheduler)
 register_policy("splitwise", SplitwiseScheduler)
 register_policy("sarathi", SarathiScheduler)
+
+# The ULB kernel and the vectorized variants (repro.scale) are imported
+# at the bottom so the base names above are registered even while those
+# modules are mid-import (scale.kernels itself imports this package).
+from repro.scheduling.ulb import ULBScheduler  # noqa: E402
+from repro.scale.kernels import (  # noqa: E402
+    VectorAcceLLMScheduler, VectorSplitwiseScheduler, VectorULBScheduler,
+    VectorVLLMScheduler)
+
+register_policy("ulb", ULBScheduler)
+register_policy("accellm-vec", VectorAcceLLMScheduler)
+register_policy("vllm-vec", VectorVLLMScheduler)
+register_policy("splitwise-vec", VectorSplitwiseScheduler)
+register_policy("ulb-vec", VectorULBScheduler)

@@ -3,13 +3,13 @@ from repro.sim.devices import ASCEND_910B2, DEVICES, H100, TPU_V5E, InstanceSpec
 from repro.sim.metrics import Summary, summarize
 from repro.sim.perf import PerfModel
 from repro.sim.policies import (AcceLLMPolicy, SarathiPolicy,
-                                SplitwisePolicy, VLLMPolicy)
+                                SplitwisePolicy, ULBPolicy, VLLMPolicy)
 from repro.sim.workload import WORKLOADS, SimRequest, make_workload
 
 __all__ = [
     "Simulator", "SimInstance", "Policy", "PerfModel", "InstanceSpec",
     "H100", "ASCEND_910B2", "TPU_V5E", "DEVICES", "Summary", "summarize",
-    "AcceLLMPolicy", "SarathiPolicy", "SplitwisePolicy", "VLLMPolicy",
-    "WORKLOADS",
+    "AcceLLMPolicy", "SarathiPolicy", "SplitwisePolicy", "ULBPolicy",
+    "VLLMPolicy", "WORKLOADS",
     "SimRequest", "make_workload",
 ]

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -99,6 +100,11 @@ class SimInstance:
         # direct line-exact sum (== the ledger's used_bytes, same
         # LineCosts): byte reads are hot (note_peak per event, can_admit
         # per routing decision) and need no ledger reconcile
+        arrays = self.__dict__.get("_arrays")
+        if arrays is not None:
+            # array state attached: the incremental aggregates hold the
+            # same exact-integer sum
+            return arrays.recs[self.iid].state_bytes()
         costs = self.store.costs
         return (sum(costs.bytes_at(r.total_len)
                     for r in self.decode_batch.values())
@@ -113,6 +119,22 @@ class SimInstance:
 
     def note_peak(self):
         self.peak_state_bytes = max(self.peak_state_bytes, self.state_bytes())
+
+    _OBSERVED = frozenset(
+        ("decode_batch", "replicas", "prefill_queue", "alive", "draining"))
+
+    def __setattr__(self, name, value):
+        # when an ArrayClusterState (repro.scale) is attached, container
+        # rebinds (``inst.prefill_queue = [...]`` in the compile/fleet
+        # paths) are re-wrapped in observing containers and fleet-state
+        # flips invalidate the usable mask — existing mutation sites
+        # stay coherent without being edited (untracked attributes skip
+        # the hook call: this intercepts every SimInstance setattr)
+        if name in SimInstance._OBSERVED:
+            arrays = self.__dict__.get("_arrays")
+            if arrays is not None:
+                value = arrays.on_setattr(self, name, value)
+        object.__setattr__(self, name, value)
 
 
 class Policy:
@@ -141,6 +163,17 @@ class Policy:
         resources without scanning global history)."""
         pass
 
+    def note_decode_advance(self, inst: SimInstance, rids, steps: int):
+        """The decode span over snapshot ``rids`` generated ``steps``
+        tokens per still-resident member — the bulk-update hook the
+        array-backed state (repro.scale) uses instead of per-token
+        bookkeeping.  ``rids`` is the batch snapshot; consumers filter
+        to survivors (``rid in inst.decode_batch``) themselves, since
+        handoffs may have added non-snapshot residents mid-span and
+        finished requests already left.  Dict-backed policies need
+        nothing here."""
+        pass
+
     def on_fleet_event(self, ev, ctrl):
         """Apply a :mod:`repro.fleet` event (kill / join / drain).
         ``ctrl`` is the run's ``FleetController`` — the policy applies
@@ -159,7 +192,8 @@ class Simulator:
     def __init__(self, policy: Policy, perf, n_instances: int,
                  max_batch: int = 64, block_lines: int = 16,
                  prefix_cache: bool = False,
-                 prefix_cache_blocks: Optional[int] = None):
+                 prefix_cache_blocks: Optional[int] = None,
+                 timeline_stride: int = 1):
         # ``perf`` is one PerfModel for a homogeneous pod, or a sequence
         # of n_instances models for a heterogeneous one (e.g. H100-class
         # and 910B2-class slices scheduled by the same kernel)
@@ -197,6 +231,19 @@ class Simulator:
         self.dropped: List[SimRequest] = []
         self.submitted: List[SimRequest] = []   # every request offered
         self.timeline: List[TimelinePoint] = []
+        #: sample the timeline every N events (1 = every event).  At
+        #: 10^6-request scale a per-event list OOMs the report; metrics
+        #: that read the timeline interpolate across the stride.
+        self.timeline_stride = max(1, timeline_stride)
+        self._ticks = 0
+        # wall-clock spent inside the scheduling policy (routing, plan
+        # compilation, completion hooks) — the scheduler-μs/iteration
+        # metric.  A depth counter keeps nested calls (kick() re-entered
+        # from inside next_plan via decode handoffs) from double-counting.
+        self.sched_time_s = 0.0
+        self.n_iterations = 0
+        self._sched_depth = 0
+        self._sched_t0 = 0.0
         # closed-loop pump (set by run() when the source demands it)
         self._pump: Optional[Iterator] = None
         self._pump_target = 0
@@ -209,6 +256,22 @@ class Simulator:
     @now.setter
     def now(self, t: float):
         self.clock.now = t
+
+    @property
+    def sched_us_per_iter(self) -> float:
+        """Mean scheduler wall-μs per completed instance iteration."""
+        return self.sched_time_s * 1e6 / max(1, self.n_iterations)
+
+    # -- scheduler timing ---------------------------------------------------------
+    def _sched_begin(self):
+        self._sched_depth += 1
+        if self._sched_depth == 1:
+            self._sched_t0 = time.perf_counter()
+
+    def _sched_end(self):
+        self._sched_depth -= 1
+        if self._sched_depth == 0:
+            self.sched_time_s += time.perf_counter() - self._sched_t0
 
     # -- event helpers ---------------------------------------------------------
     def push(self, time: float, kind: str, data=None):
@@ -230,9 +293,11 @@ class Simulator:
         if inst.iid in self._kicking:
             return
         self._kicking.add(inst.iid)
+        self._sched_begin()
         try:
             plan = self.policy.next_plan(inst)
         finally:
+            self._sched_end()
             self._kicking.discard(inst.iid)
         if plan is None:
             return
@@ -247,7 +312,11 @@ class Simulator:
 
     # -- event handlers -----------------------------------------------------------
     def _handle_arrival(self, req: SimRequest):
-        inst = self.policy.route(req)
+        self._sched_begin()
+        try:
+            inst = self.policy.route(req)
+        finally:
+            self._sched_end()
         if inst is None:
             self.dropped.append(req)
             return
@@ -262,6 +331,7 @@ class Simulator:
         plan, batch_snapshot, started = inst._running
         inst.busy = False
         inst._running = None
+        self.n_iterations += 1
         pf = prefill_part(plan)
         dc = decode_part(plan)
         if pf is not None:
@@ -274,7 +344,11 @@ class Simulator:
                 r.first_token_time = self.now
                 r.token_times.append(self.now)
                 r.generated += 1
-            self.policy.on_prefill_done(inst, reqs)
+            self._sched_begin()
+            try:
+                self.policy.on_prefill_done(inst, reqs)
+            finally:
+                self._sched_end()
         if dc is not None:
             # a fused plan IS dc.steps decode iterations: each request
             # in the snapshot advances once per step until done.  Token
@@ -298,7 +372,16 @@ class Simulator:
                         self.finished.append(r)
                         finished_now.append(r)
                         del inst.decode_batch[rid]
-            self.policy.on_decode_done(inst, finished_now)
+            self._sched_begin()
+            try:
+                # the snapshot's still-resident members advanced exactly
+                # `steps` tokens; the policy filters survivors itself so
+                # dict-backed policies (a no-op hook) pay nothing
+                self.policy.note_decode_advance(inst, batch_snapshot,
+                                                steps)
+                self.policy.on_decode_done(inst, finished_now)
+            finally:
+                self._sched_end()
         inst.note_peak()
         self.kick(inst)
 
@@ -326,6 +409,9 @@ class Simulator:
 
     # -- observability -----------------------------------------------------------
     def _sample_timeline(self):
+        self._ticks += 1
+        if (self._ticks - 1) % self.timeline_stride:
+            return
         running = [i._running[0] if i.busy and i._running else None
                    for i in self.instances]
         n_prefill = sum(1 for p in running

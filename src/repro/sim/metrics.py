@@ -25,6 +25,10 @@ class Summary:
     n_unfinished: int = 0
     slo_attainment: float = float("nan")
     goodput: float = float("nan")
+    #: mean wall-clock scheduler overhead per iteration (µs) — filled
+    #: from ``Simulator.sched_us_per_iter`` / the live cluster's
+    #: counterpart when the caller passes it; nan when untimed
+    sched_us_per_iter: float = float("nan")
 
     def row(self) -> str:
         return (f"{self.n_finished},{self.ttft_p50:.4f},{self.ttft_p99:.4f},"
@@ -39,7 +43,8 @@ class Summary:
 
 
 def summarize(requests: Iterable, n_instances: int, duration: float,
-              slo: Optional[SLO] = None) -> Summary:
+              slo: Optional[SLO] = None,
+              sched_us_per_iter: float = float("nan")) -> Summary:
     """Aggregate latency metrics over a request set.
 
     Unfinished requests (no ``finish_time``) are counted into
@@ -58,7 +63,8 @@ def summarize(requests: Iterable, n_instances: int, duration: float,
     if not finished:
         return Summary(0, *([float("nan")] * 7), 0.0, duration,
                        n_unfinished=n_unfinished,
-                       slo_attainment=slo_attainment, goodput=goodput)
+                       slo_attainment=slo_attainment, goodput=goodput,
+                       sched_us_per_iter=sched_us_per_iter)
     ttfts = np.array([r.ttft() for r in finished])
     jcts = np.array([r.jct() for r in finished])
     all_tbts = [np.asarray(r.tbts()) for r in finished
@@ -80,4 +86,5 @@ def summarize(requests: Iterable, n_instances: int, duration: float,
         n_unfinished=n_unfinished,
         slo_attainment=slo_attainment,
         goodput=goodput,
+        sched_us_per_iter=sched_us_per_iter,
     )

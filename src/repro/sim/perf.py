@@ -13,7 +13,8 @@ from functools import cached_property
 from typing import Sequence, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.kvbytes import state_bytes_at
+from repro.core.kvbytes import (bytes_per_token, fixed_state_bytes,
+                                state_bytes_at)
 from repro.scheduling.actions import MirrorSync, StreamState
 from repro.sim.devices import InstanceSpec
 from repro.stepplan import DecodePlan, MixedPlan, PrefillPlan, TransferPlan
@@ -36,14 +37,31 @@ class PerfModel:
                 f"left for KV/serving state.  Use more/larger devices per "
                 f"instance (InstanceSpec) or a smaller model.")
 
-    @property
+    @cached_property
     def weight_bytes(self) -> float:
         return self.cfg.param_count() * DTYPE_BYTES
 
-    @property
+    @cached_property
     def active_weight_bytes(self) -> float:
         """Bytes of weights actually read per decode step (MoE: active only)."""
         return self.cfg.param_count(active_only=True) * DTYPE_BYTES
+
+    # param/arch walks are priced once; the sim calls these per iteration
+    @cached_property
+    def _n_active(self) -> int:
+        return self.cfg.param_count(active_only=True)
+
+    @cached_property
+    def _n_attn(self) -> int:
+        return sum(1 for b in self.cfg.block_pattern if b == "attn")
+
+    @cached_property
+    def _line_bytes(self) -> float:
+        return bytes_per_token(self.cfg, DTYPE_BYTES)
+
+    @cached_property
+    def _fixed_bytes(self) -> int:
+        return fixed_state_bytes(self.cfg, DTYPE_BYTES)
 
     @property
     def kv_capacity_bytes(self) -> float:
@@ -59,9 +77,9 @@ class PerfModel:
 
     # -- prefill (compute-bound, §3.2) --------------------------------------
     def prefill_flops(self, prompt_lens: Sequence[int]) -> float:
-        n_active = self.cfg.param_count(active_only=True)
+        n_active = self._n_active
         total = 0.0
-        n_attn = sum(1 for b in self.cfg.block_pattern if b == "attn")
+        n_attn = self._n_attn
         for s in prompt_lens:
             total += 2.0 * n_active * s
             # causal attention: 2 matmuls * s^2/2 * heads*hd per attn layer
@@ -84,8 +102,8 @@ class PerfModel:
         exactly."""
         if not chunks:
             return 0.0
-        n_active = self.cfg.param_count(active_only=True)
-        n_attn = sum(1 for b in self.cfg.block_pattern if b == "attn")
+        n_active = self._n_active
+        n_attn = self._n_attn
         total = 0.0
         for start, end in chunks:
             c = end - start
@@ -121,14 +139,17 @@ class PerfModel:
         fused plan."""
         if not lengths:
             return 0.0
-        kv = 0.0
-        for l in lengths:
-            l += grown
-            if block_lines:
-                l = -(-l // block_lines) * block_lines
-            kv += state_bytes_at(self.cfg, l, DTYPE_BYTES)
+        # integer line totals, one multiply: bytes are exact integers in
+        # float64 so this equals the per-request Σ state_bytes_at bit
+        # for bit (sums stay far below 2**53)
+        if block_lines:
+            tot = sum(-(-(l + grown) // block_lines) * block_lines
+                      for l in lengths)
+        else:
+            tot = sum(lengths) + grown * len(lengths)
+        kv = self._line_bytes * tot + self._fixed_bytes * len(lengths)
         t_mem = (self.active_weight_bytes + kv) / self.inst.hbm_bw
-        flops = 2.0 * self.cfg.param_count(active_only=True) * len(lengths)
+        flops = 2.0 * self._n_active * len(lengths)
         t_compute = flops / (self.inst.tflops * 1e12)
         return max(max(t_mem, t_compute),
                    self.tp_collective_time(len(lengths)))

@@ -42,13 +42,15 @@ from repro.scheduling.actions import (Action, Decode, EvictReplica,
 from repro.scheduling.base import MAX_PREFILL_BATCH, SchedulerPolicy
 from repro.scheduling.baselines import (SarathiScheduler, SplitwiseScheduler,
                                         VLLMScheduler)
+from repro.scheduling.ulb import ULBScheduler
 from repro.sim.cluster import Policy, SimInstance, Simulator
 from repro.sim.workload import SimRequest
 from repro.stepplan import (DecodePlan, Planner, StepPlan, TransferPlan,
                             prefill_part)
 
 __all__ = ["AcceLLMPolicy", "VLLMPolicy", "SplitwisePolicy", "SarathiPolicy",
-           "SimInstanceView", "SimClusterView", "MAX_PREFILL_BATCH"]
+           "ULBPolicy", "SimInstanceView", "SimClusterView",
+           "MAX_PREFILL_BATCH"]
 
 
 def sim_prefix_key(inst: SimInstance, req) -> list:
@@ -224,6 +226,9 @@ class KernelPolicy(Policy):
     def __init__(self, kernel: SchedulerPolicy, fuse_decode_steps: int = 1):
         self.kernel = kernel
         self.placement = {}
+        #: array-backed cluster state (repro.scale), attached at bind
+        #: time when the kernel declares ``vectorized = True``
+        self.arrays = None
         #: same configuration rule as the live executor: the kernel
         #: declares mixing/chunking, the planner shapes iterations
         self.planner = Planner.for_policy(kernel)
@@ -240,8 +245,33 @@ class KernelPolicy(Policy):
     def name(self):  # type: ignore[override]
         return self.kernel.name
 
+    def bind(self, sim: Simulator):
+        super().bind(sim)
+        if getattr(self.kernel, "vectorized", False):
+            # lazy import: repro.sim must stay importable without the
+            # scale layer in the loop (no cycle at module load)
+            from repro.scale.state import ArrayClusterState
+            self.arrays = ArrayClusterState(sim, self.placement,
+                                            self.planner)
+            # the adapter's ledger becomes the observed dict so every
+            # placement write lands in the replica arrays
+            self.placement = self.arrays.placement
+
     def view(self) -> SimClusterView:
+        if self.arrays is not None:
+            return self.arrays.cluster_view()
         return SimClusterView(self.sim, self.placement, self.planner)
+
+    def _inst_view(self, inst: SimInstance) -> SimInstanceView:
+        """A single instance's view, from the persistent array views
+        when attached (pair-local admission/eviction decisions)."""
+        if self.arrays is not None:
+            return self.arrays.cluster_view().instances()[inst.iid]
+        return SimInstanceView(inst, self.placement, self.planner)
+
+    def note_decode_advance(self, inst, rids, steps):
+        if self.arrays is not None:
+            self.arrays.note_decode_advance(inst, rids, steps)
 
     def route(self, req: SimRequest) -> Optional[SimInstance]:
         idx = self.kernel.route(self.view(), req)
@@ -257,8 +287,12 @@ class KernelPolicy(Policy):
         nxt = self.sim.next_arrival()
         if nxt is None:
             return None
-        lengths = tuple(sorted(r.total_len
-                               for r in inst.decode_batch.values()))
+        if self.arrays is not None:
+            lens, _ = self._inst_view(inst).decode_plan_stats()
+            lengths = tuple(sorted(lens))
+        else:
+            lengths = tuple(sorted(r.total_len
+                                   for r in inst.decode_batch.values()))
         t1 = inst.perf.plan_time(DecodePlan(
             inst.iid, lengths=lengths, block_lines=inst.block_lines))
         if t1 <= 0:
@@ -576,14 +610,32 @@ class SarathiPolicy(VLLMPolicy):
 
 
 # ---------------------------------------------------------------------------
+# ULB (Universal Load Balancing — PAPERS.md competitor)
+# ---------------------------------------------------------------------------
+
+
+class ULBPolicy(VLLMPolicy):
+    """Least-outstanding-work routing over vLLM-style continuous
+    batching: same execution mechanics as :class:`VLLMPolicy`, different
+    routing kernel (``repro.scheduling.ulb``)."""
+
+    def __init__(self, kernel: Optional[ULBScheduler] = None,
+                 fuse_decode_steps: int = 1):
+        super().__init__(kernel or ULBScheduler(),
+                         fuse_decode_steps=fuse_decode_steps)
+
+
+# ---------------------------------------------------------------------------
 # Splitwise
 # ---------------------------------------------------------------------------
 
 
 class SplitwisePolicy(KernelPolicy):
 
-    def __init__(self, n_prefill: int, fuse_decode_steps: int = 1):
-        super().__init__(SplitwiseScheduler(n_prefill),
+    def __init__(self, n_prefill: int,
+                 kernel: Optional[SplitwiseScheduler] = None,
+                 fuse_decode_steps: int = 1):
+        super().__init__(kernel or SplitwiseScheduler(n_prefill),
                          fuse_decode_steps=fuse_decode_steps)
         self.n_prefill = n_prefill
 
@@ -670,7 +722,7 @@ class AcceLLMPolicy(KernelPolicy):
     # -- dynamic roles ---------------------------------------------------------
     def next_plan(self, inst):
         if inst.prefill_queue:
-            view = SimInstanceView(inst, self.placement)
+            view = self._inst_view(inst)
             take = []
             for r in inst.prefill_queue:
                 if (len(take) >= MAX_PREFILL_BATCH
@@ -804,7 +856,7 @@ class AcceLLMPolicy(KernelPolicy):
 
     # -- graceful degradation (§4.2.5) ----------------------------------------
     def _evict_replica(self, inst):
-        view = SimInstanceView(inst, self.placement)
+        view = self._inst_view(inst)
         for act in self.kernel.evict(self.view(), [view]):
             assert isinstance(act, EvictReplica)
             self.sim.instances[act.instance].replicas.pop(act.rid, None)

@@ -208,6 +208,17 @@ class Planner:
             return DecodePlan(idx)
         inst = view.instances()[idx]
         bl = inst.block_lines() if hasattr(inst, "block_lines") else 0
+        stats = getattr(inst, "decode_plan_stats", None)
+        if stats is not None:
+            # array-backed views (repro.scale) serve the rid-ordered
+            # length tuple + mirrored count straight from their caches —
+            # same values as the dict walk below, no dicts built
+            lengths, mirrored = stats()
+            if not lengths:
+                return DecodePlan(idx, block_lines=bl)
+            return DecodePlan(idx, lengths, mirrored,
+                              steps=self._fuse_steps(inst, mirrored),
+                              block_lines=bl)
         lines = inst.request_lines()
         if not lines:
             # membership is resolved at execution time (a request may

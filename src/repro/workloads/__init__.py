@@ -10,11 +10,11 @@ output on attainment and goodput.
 """
 from repro.workloads.arrivals import (ArrivalProcess, Batch, Bursty,
                                       ClosedLoop, DiurnalRamp, Poisson,
-                                      TraceReplay)
+                                      TraceFileReplay, TraceReplay)
 from repro.workloads.clock import Clock, IterationClock, ModeledSecondsClock
 from repro.workloads.lengths import (TABLE2, LengthModel, LognormalLengths,
-                                     TableLengths, TraceLengths,
-                                     UniformLengths)
+                                     TableLengths, TraceFileLengths,
+                                     TraceLengths, UniformLengths)
 from repro.workloads.metrics import (SLO, SLOSummary, TimelinePoint,
                                      queue_depth_stats, slo_summary,
                                      utilization)
@@ -24,9 +24,9 @@ from repro.workloads.spec import (PrefixReuse, RequestSource, WorkloadSpec,
 
 __all__ = [
     "ArrivalProcess", "Batch", "Poisson", "Bursty", "DiurnalRamp",
-    "ClosedLoop", "TraceReplay",
+    "ClosedLoop", "TraceReplay", "TraceFileReplay",
     "LengthModel", "TableLengths", "UniformLengths", "LognormalLengths",
-    "TraceLengths", "TABLE2",
+    "TraceLengths", "TraceFileLengths", "TABLE2",
     "Clock", "IterationClock", "ModeledSecondsClock",
     "SLO", "SLOSummary", "TimelinePoint", "slo_summary", "utilization",
     "queue_depth_stats",

@@ -141,3 +141,26 @@ class TraceReplay(ArrivalProcess):
                 raise ValueError("trace arrivals must be non-decreasing")
             last = t
             yield t
+
+
+@dataclass(frozen=True)
+class TraceFileReplay(ArrivalProcess):
+    """Streams arrival instants straight off a JSONL trace file
+    (``load_trace(path, stream=True)``): each :meth:`times` call re-opens
+    the file and yields one record at a time, so a million-request trace
+    never materializes in memory.  Pairs with ``TraceFileLengths``."""
+    path: str
+
+    def times(self, rng):
+        import json
+        last = 0.0
+        with open(self.path) as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                t = float(json.loads(line)["arrival"])
+                if t < last:
+                    raise ValueError("trace arrivals must be non-decreasing")
+                last = t
+                yield t

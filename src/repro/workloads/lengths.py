@@ -82,3 +82,42 @@ class TraceLengths(LengthModel):
     def sample(self, rng, i):
         plen, dlen = self.pairs[i]
         return int(plen), int(dlen)
+
+
+@dataclass(frozen=True)
+class TraceFileLengths(LengthModel):
+    """Streams (prompt_len, decode_len) pairs off a JSONL trace file
+    (``load_trace(path, stream=True)``) with a forward-only cursor:
+    ``RequestSource`` samples indices 0, 1, 2, ... in order, so each line
+    is read exactly when needed and the trace never lives in memory.  A
+    rewind (a fresh source re-iterating from index 0) re-opens the file."""
+    path: str
+
+    def __post_init__(self):
+        object.__setattr__(self, "_fh", None)
+        object.__setattr__(self, "_next", 0)
+
+    def _reopen(self):
+        fh = self.__dict__.get("_fh")
+        if fh is not None:
+            fh.close()
+        object.__setattr__(self, "_fh", open(self.path))
+        object.__setattr__(self, "_next", 0)
+
+    def sample(self, rng, i):
+        import json
+        if self.__dict__.get("_fh") is None or i < self._next:
+            self._reopen()
+        fh = self._fh
+        rec = None
+        while self._next <= i:
+            line = fh.readline()
+            if not line:
+                raise IndexError(
+                    f"trace {self.path!r} has no record {i}")
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            object.__setattr__(self, "_next", self._next + 1)
+        return int(rec["prompt_len"]), int(rec["decode_len"])

@@ -22,8 +22,10 @@ from typing import Callable, Iterator, List, Optional
 import numpy as np
 
 from repro.serving.request import Request
-from repro.workloads.arrivals import ArrivalProcess, Poisson, TraceReplay
-from repro.workloads.lengths import LengthModel, TableLengths, TraceLengths
+from repro.workloads.arrivals import (ArrivalProcess, Poisson,
+                                      TraceFileReplay, TraceReplay)
+from repro.workloads.lengths import (LengthModel, TableLengths,
+                                     TraceFileLengths, TraceLengths)
 
 #: extras_fn(cfg, key, i) -> per-request modality payload (or None)
 ExtrasFn = Callable[[object, object, int], Optional[dict]]
@@ -190,8 +192,17 @@ def save_trace(path, requests) -> int:
     return n
 
 
-def load_trace(path, name: str = "") -> WorkloadSpec:
-    """Read a JSONL trace back into a replayable :class:`WorkloadSpec`."""
+def load_trace(path, name: str = "", stream: bool = False) -> WorkloadSpec:
+    """Read a JSONL trace back into a replayable :class:`WorkloadSpec`.
+
+    With ``stream=True`` the spec replays straight off the file
+    (``TraceFileReplay`` × ``TraceFileLengths``): nothing is materialized
+    up front, so a 10^6-line trace costs O(1) memory — the form
+    ``benchmarks/bench_scale.py`` feeds the million-request harness."""
+    if stream:
+        return WorkloadSpec(arrival=TraceFileReplay(str(path)),
+                            lengths=TraceFileLengths(str(path)),
+                            name=name or f"trace:{path}")
     arrivals, pairs = [], []
     with open(path) as fh:
         for line in fh:

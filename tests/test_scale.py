@@ -1,0 +1,426 @@
+"""Scale layer: the vectorized scheduler core must be a bit-identical
+drop-in for the dict-backed policies (same kernel decision trace, same
+request outcomes), ULB must route by least outstanding work on both
+backends, and the supporting harness pieces (streaming traces, timeline
+stride, O(1) ledger bytes) must hold their invariants."""
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.scheduling.registry import get_policy
+from repro.sim import (H100, AcceLLMPolicy, InstanceSpec, PerfModel,
+                       Simulator, SplitwisePolicy, ULBPolicy, VLLMPolicy)
+from repro.workloads import Bursty, TableLengths, WorkloadSpec
+
+CFG = get_config("llama2-70b")
+PERF = PerfModel(CFG, InstanceSpec(H100, 4))
+
+#: small-but-busy MMPP stream: enough contention that routing, pairing
+#: and rebalancing all fire, cheap enough for CI
+_SPEC = WorkloadSpec(
+    arrival=Bursty(rate_on=12.0, duration=40.0, rate_off=2.0,
+                   mean_on=6.0, mean_off=4.0),
+    lengths=TableLengths(workload="mixed"), name="bursty")
+
+
+def _run_traced(policy, n_instances=4, horizon=500.0, seed=0):
+    policy.kernel.trace = []
+    sim = Simulator(policy, PERF, n_instances=n_instances)
+    sim.run(source=_SPEC.source(seed=seed), horizon=horizon)
+    return policy.kernel.trace, sim
+
+
+def _fingerprint(sim):
+    return [(r.rid, r.generated, r.finish_time)
+            for r in sorted(sim.submitted, key=lambda r: r.rid)]
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: array-backed kernels == dict-backed kernels (sim)
+# ---------------------------------------------------------------------------
+
+
+PAIRS = {
+    "accellm": (lambda: AcceLLMPolicy(),
+                lambda: AcceLLMPolicy(kernel=get_policy("accellm-vec"))),
+    "vllm": (lambda: VLLMPolicy(),
+             lambda: VLLMPolicy(kernel=get_policy("vllm-vec"))),
+    "ulb": (lambda: ULBPolicy(),
+            lambda: ULBPolicy(kernel=get_policy("ulb-vec"))),
+    "splitwise": (lambda: SplitwisePolicy(1),
+                  lambda: SplitwisePolicy(
+                      1, kernel=get_policy("splitwise-vec", n_prefill=1))),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PAIRS))
+def test_vectorized_kernel_identical_decisions_sim(name):
+    """The array-backed kernel must emit the identical decision trace AND
+    produce identical request outcomes on a bursty workload — the
+    guarantee that lets the shootout run vectorized kernels and report
+    them as the original policies."""
+    make_scalar, make_vec = PAIRS[name]
+    tr_s, sim_s = _run_traced(make_scalar())
+    tr_v, sim_v = _run_traced(make_vec())
+    assert len(tr_s) > 50, "trace must exercise real scheduling"
+    assert tr_s == tr_v, (
+        f"{name}: vectorized kernel diverged from dict-backed at entry "
+        f"{next(i for i, (a, b) in enumerate(zip(tr_s, tr_v)) if a != b)}"
+        if tr_s != tr_v and any(a != b for a, b in zip(tr_s, tr_v))
+        else f"{name}: trace lengths differ {len(tr_s)} vs {len(tr_v)}")
+    assert _fingerprint(sim_s) == _fingerprint(sim_v)
+
+
+def test_vectorized_kernel_reports_sched_speed():
+    """The timer plumbing: a sim run reports a positive per-iteration
+    scheduler overhead and counts iterations."""
+    _, sim = _run_traced(AcceLLMPolicy(kernel=get_policy("accellm-vec")))
+    assert sim.n_iterations > 100
+    assert sim.sched_us_per_iter > 0.0
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence on the live backend: vec kernels fall back cleanly
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def live_setup():
+    import jax
+    from repro.models import init_params
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run_live(cfg, params, kernel, n_instances=2):
+    import jax
+    from repro.scheduling import LiveCluster
+    from repro.serving import Request
+    kernel.trace = []
+    cluster = LiveCluster(cfg, params, n_instances=n_instances, num_slots=8,
+                          kv_capacity=256, policy=kernel)
+    key = jax.random.PRNGKey(7)
+    lengths = [(8, 4), (12, 6), (6, 5), (10, 3), (7, 6), (9, 4)]
+    for i, (plen, dlen) in enumerate(lengths):
+        # explicit rids: the global Request counter would differ between
+        # the two runs and make the traces trivially unequal
+        cluster.submit(Request(
+            prompt_len=plen, max_new_tokens=dlen, rid=i,
+            prompt_tokens=jax.random.randint(
+                jax.random.fold_in(key, i), (1, plen), 0, cfg.vocab_size)))
+        cluster.step()
+    steps = 0
+    while cluster.pending() and steps < 60:
+        cluster.step()
+        steps += 1
+    assert not cluster.pending()
+    return kernel.trace, cluster
+
+
+@pytest.mark.parametrize("name", ["accellm", "ulb"])
+def test_vectorized_kernel_identical_decisions_live(live_setup, name):
+    """On the live backend there is no array state (``cluster.arrays`` is
+    None), so the vectorized kernels must fall back to the scalar path —
+    and therefore trace identically to the dict-backed originals."""
+    cfg, params = live_setup
+    tr_s, cl_s = _run_live(cfg, params, get_policy(name))
+    tr_v, cl_v = _run_live(cfg, params, get_policy(f"{name}-vec"))
+    assert tr_s, "live trace must not be empty"
+    assert tr_s == tr_v
+    assert cl_s.sched_us_per_iter > 0.0
+    assert cl_s.n_iterations == cl_v.n_iterations
+
+
+# ---------------------------------------------------------------------------
+# ULB kernel: least outstanding work in tokens
+# ---------------------------------------------------------------------------
+
+
+class _FakeInst:
+    def __init__(self, index, backlog, remaining, admit=True):
+        self.index = index
+        self._backlog = backlog
+        self._remaining = remaining
+        self._admit = admit
+
+    def alive(self):
+        return True
+
+    def draining(self):
+        return False
+
+    def can_admit(self, req):
+        return self._admit
+
+    def can_queue(self):
+        return True
+
+    def prefill_backlog_tokens(self):
+        return self._backlog
+
+    def decode_remaining(self):
+        return dict(enumerate(self._remaining))
+
+
+class _FakeCluster:
+    def __init__(self, insts):
+        self._insts = insts
+
+    def instances(self):
+        return self._insts
+
+
+class _FakeReq:
+    rid = 77
+
+
+def test_ulb_routes_to_least_outstanding_work():
+    """Queue length and resident count must NOT decide: instance 1 has
+    more resident requests but strictly less outstanding token work."""
+    kernel = get_policy("ulb")
+    cluster = _FakeCluster([
+        _FakeInst(0, backlog=500, remaining=[10]),          # 510 tokens
+        _FakeInst(1, backlog=0, remaining=[40, 50, 60]),    # 150 tokens
+    ])
+    assert kernel.route(cluster, _FakeReq()) == 1
+
+
+def test_ulb_tie_breaks_by_index():
+    kernel = get_policy("ulb")
+    cluster = _FakeCluster([_FakeInst(0, 100, [20]), _FakeInst(1, 0, [120])])
+    assert kernel.route(cluster, _FakeReq()) == 0
+
+
+def test_ulb_prefers_admittable_instances():
+    """A full instance with less work must lose to an admittable one —
+    admission headroom gates the candidate pool before the work score."""
+    kernel = get_policy("ulb")
+    cluster = _FakeCluster([
+        _FakeInst(0, backlog=0, remaining=[5], admit=False),
+        _FakeInst(1, backlog=0, remaining=[900]),
+    ])
+    assert kernel.route(cluster, _FakeReq()) == 1
+
+
+def test_ulb_runs_end_to_end_on_sim():
+    """ULB completes the bursty stream and emits route decisions."""
+    trace, sim = _run_traced(ULBPolicy())
+    assert {e[0] for e in trace} == {"route"}
+    assert all(r.finish_time is not None for r in sim.submitted)
+
+
+# ---------------------------------------------------------------------------
+# golden live-vs-sim trace: the ULB kernel decides identically on both
+# backends (the same consistency check test_scheduling pins for AcceLLM)
+# ---------------------------------------------------------------------------
+
+#: one scheduler iteration per op; arrivals submit right before the step
+_ULB_SCRIPT = [("arrive", 8, 4), ("tick",), ("arrive", 12, 6), ("tick",),
+               ("arrive", 6, 5), ("arrive", 10, 3), ("tick",),
+               ("arrive", 7, 6), ("tick",)]
+
+
+def _run_live_ulb(cfg, params, n_instances=2):
+    import jax
+    from repro.scheduling import LiveCluster
+    from repro.serving import Request
+    kernel = get_policy("ulb")
+    kernel.trace = []
+    cluster = LiveCluster(cfg, params, n_instances=n_instances, num_slots=8,
+                          kv_capacity=256, policy=kernel)
+    key = jax.random.PRNGKey(11)
+    rids = []
+    for i, op in enumerate(_ULB_SCRIPT):
+        if op[0] == "arrive":
+            plen, dlen = op[1], op[2]
+            req = Request(prompt_len=plen, max_new_tokens=dlen,
+                          prompt_tokens=jax.random.randint(
+                              jax.random.fold_in(key, i), (1, plen), 0,
+                              cfg.vocab_size))
+            rids.append(req.rid)
+            cluster.submit(req)
+        cluster.step()
+    steps = 0
+    while cluster.pending() and steps < 60:
+        cluster.step()
+        steps += 1
+    assert not cluster.pending()
+    return kernel.trace, rids, steps
+
+
+def _run_sim_ulb(rids, extra_ticks, n_instances=2):
+    """Drive the simulator adapter through the same script lock-step:
+    arrivals route+prefill via the adapter (kernel decides), each tick
+    advances every decode batch one token.  Unlike the AcceLLM golden
+    driver there is NO prefill skip — vLLM-style mixed batching decodes
+    the freshly prefilled request within the same iteration, exactly as
+    the live executor's phase order does."""
+    from repro.sim.workload import SimRequest
+    kernel = get_policy("ulb")
+    kernel.trace = []
+    sim = Simulator(ULBPolicy(kernel=kernel), PERF, n_instances=n_instances)
+    sim.kick = lambda inst: None          # event mechanics not under test
+    pol = sim.policy
+
+    def tick():
+        for inst in sim.instances:
+            done = []
+            for rid, r in list(inst.decode_batch.items()):
+                r.generated += 1
+                if r.done:
+                    del inst.decode_batch[rid]
+                    done.append(r)
+            pol.on_decode_done(inst, done)
+
+    arrivals = iter(rids)
+    for op in _ULB_SCRIPT:
+        if op[0] == "arrive":
+            r = SimRequest(rid=next(arrivals), arrival=0.0,
+                           prompt_len=op[1], decode_len=op[2])
+            inst = pol.route(r)
+            r.generated = 1               # the prefill's first token
+            pol.on_prefill_done(inst, [r])
+        tick()
+    for _ in range(extra_ticks):
+        tick()
+    return kernel.trace
+
+
+def test_golden_ulb_trace_live_vs_sim(live_setup):
+    cfg, params = live_setup
+    live_trace, rids, extra = _run_live_ulb(cfg, params)
+    sim_trace = _run_sim_ulb(rids, extra)
+    assert live_trace == sim_trace, (
+        "ULB kernel made different decisions on the two backends:\n"
+        f"live: {live_trace}\nsim:  {sim_trace}")
+    assert {e[0] for e in live_trace} == {"route"}
+    # least-outstanding-work routing must spread the script across both
+    assert {e[2] for e in live_trace} == set(range(2))
+
+
+# ---------------------------------------------------------------------------
+# streaming JSONL traces: stream=True replays bit-identically, O(1) memory
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_trace_round_trip(tmp_path):
+    from repro.workloads import TraceFileLengths, TraceFileReplay, \
+        load_trace, save_trace
+    path = tmp_path / "t.jsonl"
+    n = save_trace(path, _SPEC.source(seed=5))   # consumed lazily
+    eager = load_trace(path)
+    lazy = load_trace(path, stream=True)
+    assert isinstance(lazy.arrival, TraceFileReplay)
+    assert isinstance(lazy.lengths, TraceFileLengths)
+    key = lambda rs: [(r.rid, r.arrival, r.prompt_len, r.max_new_tokens)
+                      for r in rs]
+    eager_stream = key(eager.source(seed=0))
+    assert len(eager_stream) == n
+    assert key(lazy.source(seed=0)) == eager_stream
+    # a fresh source rewinds the forward-only cursor
+    assert key(lazy.source(seed=0)) == eager_stream
+
+
+def test_streaming_trace_drives_simulator(tmp_path):
+    from repro.workloads import load_trace, save_trace
+    path = tmp_path / "t.jsonl"
+    save_trace(path, _SPEC.source(seed=0))
+    tr_mem, sim_mem = _run_traced(AcceLLMPolicy())
+    pol = AcceLLMPolicy()
+    pol.kernel.trace = []
+    sim = Simulator(pol, PERF, n_instances=4)
+    sim.run(source=load_trace(path, stream=True).source(seed=0),
+            horizon=500.0)
+    assert pol.kernel.trace == tr_mem
+    assert _fingerprint(sim) == _fingerprint(sim_mem)
+
+
+def test_streaming_fleet_trace_round_trip(tmp_path):
+    from repro.fleet import (Drain, FleetTraceReplay, JoinInstance,
+                             KillInstance, load_fleet_trace,
+                             save_fleet_trace)
+    path = tmp_path / "f.jsonl"
+    events = [KillInstance(1.5, 0), JoinInstance(3.0, None),
+              Drain(4.0, 1), JoinInstance(6.0, 0)]
+    save_fleet_trace(path, events)
+    eager = load_fleet_trace(path)
+    lazy = load_fleet_trace(path, stream=True)
+    assert isinstance(lazy, FleetTraceReplay)
+    assert lazy.stream() == eager.stream() == events
+    assert lazy.stream() == events      # re-iterable
+
+
+def test_streaming_trace_missing_record(tmp_path):
+    from repro.workloads import TraceFileLengths
+    path = tmp_path / "t.jsonl"
+    path.write_text(json.dumps(
+        {"arrival": 0.0, "prompt_len": 5, "decode_len": 3}) + "\n")
+    lengths = TraceFileLengths(str(path))
+    assert lengths.sample(None, 0) == (5, 3)
+    with pytest.raises(IndexError):
+        lengths.sample(None, 1)
+
+
+# ---------------------------------------------------------------------------
+# timeline stride: bounded observability memory, same aggregate metrics
+# ---------------------------------------------------------------------------
+
+
+def test_sim_timeline_stride_bounds_memory():
+    def run(stride):
+        sim = Simulator(AcceLLMPolicy(), PERF, n_instances=4,
+                        timeline_stride=stride)
+        sim.run(source=_SPEC.source(seed=0), horizon=500.0)
+        return sim
+    dense, strided = run(1), run(8)
+    assert 0 < len(strided.timeline) < len(dense.timeline)
+    assert len(strided.timeline) <= len(dense.timeline) // 8 + 1
+    # sampling must not perturb the simulation itself
+    assert _fingerprint(strided) == _fingerprint(dense)
+    assert strided.n_iterations == dense.n_iterations
+
+
+def test_live_timeline_stride(live_setup):
+    from repro.api import ServeSpec, serve
+    cfg, params = live_setup
+    def run(stride):
+        spec = ServeSpec(arch="starcoder2-3b", policy="accellm",
+                         n_instances=2, num_slots=6, kv_capacity=128,
+                         n_requests=4, workload="light", max_steps=200,
+                         timeline_stride=stride)
+        return serve(spec, cfg=cfg, params=params)
+    dense, strided = run(1), run(4)
+    assert dense.all_finished and strided.all_finished
+    assert 0 < len(strided.timeline) < len(dense.timeline)
+    assert strided.sched_us_per_iter > 0.0
+    assert strided.cluster.n_iterations == dense.cluster.n_iterations
+
+
+# ---------------------------------------------------------------------------
+# O(1) ledger bytes: the running total must track every mutation path
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_used_bytes_matches_per_request_sum():
+    from repro.kvstore import BlockLedger, LineCosts
+    costs = LineCosts.from_config(CFG)
+    led = BlockLedger(costs=costs, num_blocks=64, block_lines=4)
+
+    def explicit():
+        return sum(costs.bytes_at(led.lines(r)) for r in led.resident())
+
+    led.alloc(0, 6)
+    led.alloc(1, 0)
+    assert led.used_bytes() == explicit()
+    led.append_line(0, 3)
+    led.append_line(1, 9)
+    assert led.used_bytes() == explicit()
+    led.set_lines(1, 4)            # shrink path
+    led.set_lines(0, 20)           # grow path
+    assert led.used_bytes() == explicit()
+    led.free(0)
+    assert led.used_bytes() == explicit()
+    led.free(1)
+    assert led.used_bytes() == 0.0

@@ -31,7 +31,9 @@ def setup():
 
 
 def test_registry_has_all_policies():
-    assert policy_names() == ["accellm", "sarathi", "splitwise", "vllm"]
+    assert policy_names() == ["accellm", "accellm-vec", "sarathi",
+                              "splitwise", "splitwise-vec", "ulb",
+                              "ulb-vec", "vllm", "vllm-vec"]
     for name in policy_names():
         pol = get_policy(name)
         assert pol.name == name
