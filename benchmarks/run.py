@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.bench_prefix",          # prefix cache: reuse-probability sweep
     "benchmarks.bench_mesh",            # TP mesh decode + collective mirror
     "benchmarks.bench_scale",           # vectorized scheduler + ULB shootout
+    "benchmarks.bench_chaos",           # degradation: hedging vs no-hedge
 ]
 
 

@@ -52,6 +52,16 @@ class ServeSpec:
     #: block pool)
     prefix_cache_blocks: Optional[int] = None
     redundancy: bool = True            # forwarded to redundancy-aware policies
+    #: straggler hedging (forwarded to hedging-aware policies): decode
+    #: routes to synced mirrors when an instance's health EWMA crosses
+    #: the kernel's threshold
+    hedging: bool = True
+    #: bounded admission queue: arrivals are shed at the door once the
+    #: backlog holds this many requests (None = unbounded)
+    max_queue: Optional[int] = None
+    #: deadline-aware shedding: queued requests waiting longer than this
+    #: many iterations are refused (None = never); pair with ``slo.ttft``
+    shed_deadline: Optional[float] = None
     reduced: bool = True               # CPU-sized variant of the architecture
     temperature: float = 0.0
     eos_token: Optional[int] = None
@@ -111,12 +121,29 @@ class ServeReport:
 
     @property
     def all_finished(self) -> bool:
-        return (len(self.finished) == self.n_submitted
-                and self.n_undelivered == 0)
+        """Every submitted request reached a terminal state and the
+        source was fully delivered.  Shed/aborted requests are terminal
+        — a degraded run *completes*; whether it was healthy is the SLO
+        summary's question (sheds count as misses there)."""
+        return (len(self.finished) + self.n_shed + self.n_aborted
+                == self.n_submitted and self.n_undelivered == 0)
 
     @property
     def n_unfinished(self) -> int:
-        return self.n_submitted - len(self.finished)
+        return (self.n_submitted - len(self.finished)
+                - self.n_shed - self.n_aborted)
+
+    @property
+    def n_shed(self) -> int:
+        """Requests refused by admission control (queue bound or
+        deadline) — deliberate, counted SLO misses."""
+        return len(self.cluster.shed)
+
+    @property
+    def n_aborted(self) -> int:
+        """Requests torn down mid-flight (client aborts + KV-pressure
+        aborts)."""
+        return len(self.cluster.aborted)
 
     @property
     def n_undelivered(self) -> int:
@@ -168,6 +195,9 @@ class ServeReport:
         lines = [f"finished {len(self.finished)}/{self.n_submitted}"
                  + (f" ({self.n_unfinished} unfinished)"
                     if self.n_unfinished else "")
+                 + (f" ({self.n_shed} shed)" if self.n_shed else "")
+                 + (f" ({self.n_aborted} aborted)"
+                    if self.n_aborted else "")
                  + (f" [{self.n_undelivered} never delivered — raise "
                     f"max_steps]" if self.n_undelivered else "")]
         if self.finished:
@@ -206,6 +236,8 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
     kwargs = dict(spec.policy_kwargs)
     if policy_accepts(spec.policy, "redundancy"):
         kwargs.setdefault("redundancy", spec.redundancy)
+    if policy_accepts(spec.policy, "hedging"):
+        kwargs.setdefault("hedging", spec.hedging)
     policy = get_policy(spec.policy, **kwargs)
     fleet = (FleetController(spec.fleet, seed=spec.seed)
              if spec.fleet is not None else None)
@@ -226,7 +258,9 @@ def build_cluster(spec: ServeSpec, cfg=None, params=None) -> LiveCluster:
                        prefix_cache=spec.prefix_cache,
                        prefix_cache_blocks=spec.prefix_cache_blocks,
                        fleet=fleet, mesh=mesh,
-                       timeline_stride=spec.timeline_stride)
+                       timeline_stride=spec.timeline_stride,
+                       max_queue=spec.max_queue,
+                       shed_deadline=spec.shed_deadline)
 
 
 def serve(spec: ServeSpec,

@@ -149,13 +149,19 @@ class ModelConfig:
             object.__setattr__(
                 self, "block_pattern", tuple(["attn"] * self.num_layers)
             )
-        assert len(self.block_pattern) == self.num_layers, (
-            f"{self.name}: block_pattern len {len(self.block_pattern)} != "
-            f"num_layers {self.num_layers}"
-        )
+        # user-supplied configuration is validated with real exceptions,
+        # not asserts: it must fail loudly under ``python -O`` too
+        if len(self.block_pattern) != self.num_layers:
+            raise ValueError(
+                f"{self.name}: block_pattern len {len(self.block_pattern)} "
+                f"!= num_layers {self.num_layers}")
         for b in self.block_pattern:
-            assert b in VALID_BLOCKS, f"unknown block kind {b!r}"
-        assert self.num_heads % max(self.num_kv_heads, 1) == 0
+            if b not in VALID_BLOCKS:
+                raise ValueError(f"unknown block kind {b!r}")
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError(
+                f"{self.name}: num_heads {self.num_heads} not divisible "
+                f"by num_kv_heads {self.num_kv_heads}")
 
     @property
     def q_per_kv(self) -> int:

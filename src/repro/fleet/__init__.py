@@ -8,14 +8,18 @@ decision trace both backends must agree on.
 """
 from repro.fleet.controller import (FailoverPlan, FleetController, Promotion,
                                     reset_for_reprefill, rollback_tokens)
-from repro.fleet.events import (Drain, FixedFleet, FleetEvent, FleetSchedule,
-                                FleetTraceReplay, JoinInstance, KillInstance,
-                                PoissonFailures, load_fleet_trace,
+from repro.fleet.events import (DegradeInstance, Drain, FixedFleet,
+                                FleetEvent, FleetSchedule, FleetTraceReplay,
+                                JoinInstance, KillInstance,
+                                PoissonDegradations, PoissonFailures,
+                                RecoverInstance, load_fleet_trace,
                                 save_fleet_trace)
 
 __all__ = [
-    "KillInstance", "JoinInstance", "Drain", "FleetEvent",
+    "KillInstance", "JoinInstance", "Drain", "DegradeInstance",
+    "RecoverInstance", "FleetEvent",
     "FleetSchedule", "FixedFleet", "FleetTraceReplay", "PoissonFailures",
+    "PoissonDegradations",
     "save_fleet_trace", "load_fleet_trace",
     "FleetController", "FailoverPlan", "Promotion",
     "reset_for_reprefill", "rollback_tokens",

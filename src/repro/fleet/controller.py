@@ -70,7 +70,8 @@ class FleetController:
 
     STATS = ("kills", "joins", "drains", "promotions", "requeues",
              "requeue_backlog", "reprefill_tokens", "lost_lines",
-             "lost_decode_tokens", "warm_streams")
+             "lost_decode_tokens", "warm_streams",
+             "degrades", "recoveries", "hedges", "sheds", "aborts")
 
     def __init__(self, schedule: Optional[FleetSchedule] = None,
                  seed: int = 0):

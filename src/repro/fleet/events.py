@@ -48,7 +48,30 @@ class Drain:
     kind = "drain"
 
 
-FleetEvent = Union[KillInstance, JoinInstance, Drain]
+@dataclass(frozen=True)
+class DegradeInstance:
+    """Instance ``instance`` turns into a straggler at ``t`` — still
+    alive, still correct, just slow (thermal throttle, a noisy
+    neighbor, a browned-out link).  ``factor`` scales its compute step
+    times and ``link_factor`` its transfer times until a matching
+    :class:`RecoverInstance` lands."""
+    t: float
+    instance: int
+    factor: float = 4.0
+    link_factor: float = 1.0
+    kind = "degrade"
+
+
+@dataclass(frozen=True)
+class RecoverInstance:
+    """Instance ``instance`` returns to full speed at ``t``."""
+    t: float
+    instance: int
+    kind = "recover"
+
+
+FleetEvent = Union[KillInstance, JoinInstance, Drain, DegradeInstance,
+                   RecoverInstance]
 
 
 class FleetSchedule:
@@ -102,6 +125,32 @@ class PoissonFailures(FleetSchedule):
                 yield JoinInstance(t + self.recovery, victim)
 
 
+@dataclass(frozen=True)
+class PoissonDegradations(FleetSchedule):
+    """Seeded memoryless *partial* failures — the straggler analogue of
+    :class:`PoissonFailures`.  Exponential gaps with mean ``mtbf`` over
+    ``duration`` time units, each degrading a uniformly chosen instance
+    by ``factor`` (and its links by ``link_factor``); with ``recovery``
+    set the instance returns to full speed ``recovery`` units later."""
+    mtbf: float
+    duration: float
+    n_instances: int
+    recovery: Optional[float] = None
+    factor: float = 4.0
+    link_factor: float = 1.0
+
+    def events(self, rng):
+        t = 0.0
+        while True:
+            t += rng.exponential(self.mtbf)
+            if t >= self.duration:
+                return
+            victim = int(rng.integers(self.n_instances))
+            yield DegradeInstance(t, victim, self.factor, self.link_factor)
+            if self.recovery is not None:
+                yield RecoverInstance(t + self.recovery, victim)
+
+
 # ---------------------------------------------------------------------------
 # JSONL trace round-trip (mirrors repro.workloads.spec.save_trace)
 # ---------------------------------------------------------------------------
@@ -113,20 +162,28 @@ def save_fleet_trace(path, events: Sequence[FleetEvent]) -> int:
     n = 0
     with open(path, "w") as fh:
         for ev in events:
-            fh.write(json.dumps({"t": ev.t, "event": ev.kind,
-                                 "instance": ev.instance}) + "\n")
+            rec = {"t": ev.t, "event": ev.kind, "instance": ev.instance}
+            if ev.kind == "degrade":
+                rec["factor"] = ev.factor
+                rec["link_factor"] = ev.link_factor
+            fh.write(json.dumps(rec) + "\n")
             n += 1
     return n
 
 
 def _parse_fleet_record(rec) -> FleetEvent:
-    kinds = {"kill": KillInstance, "join": JoinInstance, "drain": Drain}
+    kinds = {"kill": KillInstance, "join": JoinInstance, "drain": Drain,
+             "degrade": DegradeInstance, "recover": RecoverInstance}
     cls = kinds[rec["event"]]
     instance = rec.get("instance")
     if instance is not None:
         instance = int(instance)
     elif cls is not JoinInstance:
         raise ValueError(f"{rec['event']} event needs an instance")
+    if cls is DegradeInstance:
+        return cls(float(rec["t"]), instance,
+                   float(rec.get("factor", 4.0)),
+                   float(rec.get("link_factor", 1.0)))
     return cls(float(rec["t"]), instance)
 
 

@@ -24,8 +24,9 @@ from typing import List, Optional
 
 from repro.api import ServeSpec
 from repro.configs import get_config, list_archs
-from repro.fleet import (Drain, FleetSchedule, JoinInstance, KillInstance,
-                         PoissonFailures, load_fleet_trace)
+from repro.fleet import (DegradeInstance, Drain, FleetSchedule,
+                         JoinInstance, KillInstance, PoissonFailures,
+                         RecoverInstance, load_fleet_trace)
 from repro.scheduling.registry import policy_names
 
 #: accelerator asked of the node pool; the dry-run never allocates one
@@ -126,6 +127,20 @@ def fleet_timeline(spec: ServeSpec, schedule: Optional[FleetSchedule],
         elif isinstance(ev, Drain):
             steps.append({"t": ev.t, "op": "cordon",
                           "pod": pod_name(spec, ev.instance)})
+        elif isinstance(ev, DegradeInstance):
+            # partial failure: the pod keeps serving — annotate it so
+            # dashboards and affinity rules can see the straggler; the
+            # scheduler-level response (hedging) happens in-band
+            steps.append({"t": ev.t, "op": "annotate",
+                          "pod": pod_name(spec, ev.instance),
+                          "annotations": {
+                              "repro/degraded": "true",
+                              "repro/degrade-factor": str(ev.factor),
+                              "repro/link-factor": str(ev.link_factor)}})
+        elif isinstance(ev, RecoverInstance):
+            steps.append({"t": ev.t, "op": "annotate",
+                          "pod": pod_name(spec, ev.instance),
+                          "annotations": {"repro/degraded": "false"}})
         else:
             raise ValueError(f"unknown fleet event {ev!r}")
     steps.append({"t": None, "op": "teardown",

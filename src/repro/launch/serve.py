@@ -29,7 +29,8 @@ import argparse
 
 from repro.api import ServeSpec, serve
 from repro.configs import list_archs
-from repro.fleet import PoissonFailures, load_fleet_trace
+from repro.fleet import (FixedFleet, PoissonDegradations, PoissonFailures,
+                         load_fleet_trace)
 from repro.scheduling.registry import policy_names
 from repro.workloads import (SLO, TABLE2, Batch, Bursty, ClosedLoop,
                              DiurnalRamp, Poisson, PrefixReuse, TableLengths,
@@ -55,15 +56,30 @@ def build_arrival(args):
 def build_fleet(args):
     """Fleet fault-injection schedule from the CLI flags (repro.fleet):
     a recorded JSONL trace replays exactly; an MTBF draws seeded
-    Poisson failures across the serve window."""
+    Poisson failures across the serve window, and ``--degrade-mtbf``
+    adds seeded partial failures (stragglers).  When both are given the
+    two streams are pre-drawn with the run's seed and merged into one
+    deterministic schedule."""
     if args.fleet_trace:
         return load_fleet_trace(args.fleet_trace)
+    schedules = []
     if args.fleet_mtbf:
-        return PoissonFailures(mtbf=args.fleet_mtbf,
-                               duration=args.duration,
-                               n_instances=args.instances,
-                               recovery=args.fleet_recovery)
-    return None
+        schedules.append(PoissonFailures(mtbf=args.fleet_mtbf,
+                                         duration=args.duration,
+                                         n_instances=args.instances,
+                                         recovery=args.fleet_recovery))
+    if args.degrade_mtbf:
+        schedules.append(PoissonDegradations(
+            mtbf=args.degrade_mtbf, duration=args.duration,
+            n_instances=args.instances, recovery=args.degrade_recovery,
+            factor=args.degrade_factor))
+    if not schedules:
+        return None
+    if len(schedules) == 1:
+        return schedules[0]
+    merged = sorted((ev for s in schedules for ev in s.stream(args.seed)),
+                    key=lambda e: e.t)
+    return FixedFleet(fleet_events=tuple(merged))
 
 
 def main():
@@ -109,6 +125,23 @@ def main():
     ap.add_argument("--fleet-trace", default=None,
                     help="JSONL fleet trace to replay "
                          "(repro.fleet.save_fleet_trace)")
+    ap.add_argument("--degrade-mtbf", type=float, default=None,
+                    help="mean iterations between partial failures "
+                         "(seeded Poisson straggler injection)")
+    ap.add_argument("--degrade-factor", type=float, default=4.0,
+                    help="slowdown factor of a degraded instance")
+    ap.add_argument("--degrade-recovery", type=float, default=None,
+                    help="iterations until a degraded instance returns "
+                         "to full speed (default: never)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: shed arrivals once the "
+                         "backlog holds this many requests")
+    ap.add_argument("--shed-deadline", type=float, default=None,
+                    help="shed queued requests waiting longer than this "
+                         "many iterations (deadline-aware admission)")
+    ap.add_argument("--no-hedging", action="store_true",
+                    help="disable straggler hedging in hedging-aware "
+                         "policies (decode stays on degraded instances)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="refcounted radix prefix cache on every engine: "
                          "shared prompt heads prefill once and dedup in HBM")
@@ -155,7 +188,9 @@ def main():
         block_lines=args.block_lines, fuse_decode_steps=args.fuse_steps,
         prefix_cache=args.prefix_cache,
         prefix_cache_blocks=args.prefix_cache_blocks,
-        redundancy=not args.no_redundancy, reduced=not args.full_config,
+        redundancy=not args.no_redundancy, hedging=not args.no_hedging,
+        max_queue=args.max_queue, shed_deadline=args.shed_deadline,
+        reduced=not args.full_config,
         seed=args.seed, max_steps=args.max_steps, traffic=traffic, slo=slo,
         fleet=build_fleet(args), mesh_tp=args.mesh_tp)
     print(f"serving {args.arch} on {args.instances} instances "

@@ -149,6 +149,11 @@ class VectorAcceLLMScheduler(AcceLLMScheduler):
             return None
         memf2 = st.mem_free_vec()[:n_paired].reshape(-1, 2)
         score = (memf2 * u2).sum(axis=1)   # dead side adds +0.0 — exact
+        if self.hedging:
+            # same arithmetic as the scalar _pair_score: free memory
+            # over the pair's worst health (exactly /1.0 when nominal)
+            h2 = st.health_vec()[:n_paired].reshape(-1, 2)
+            score = score / h2.max(axis=1)
         score[~elig] = -np.inf
         pi = int(np.argmax(score))         # first max == Python max order
         side = self._vec_choose_side(st, pi, req)
@@ -175,7 +180,14 @@ class VectorAcceLLMScheduler(AcceLLMScheduler):
                               if iids[s] == victims[0].instance]
             else:
                 open_sides = live      # sim can_queue: every live side
-        return min(open_sides, key=lambda s: (st.decode_count(iids[s]), s))
+        if self.hedging:
+            # scalar _prefill_cost over the arrays: (load+1) * health
+            h = st.health_vec()
+            return min(open_sides,
+                       key=lambda s: ((st.decode_count(iids[s]) + 1)
+                                      * float(h[iids[s]]), s))
+        return min(open_sides,
+                   key=lambda s: (float(st.decode_count(iids[s])), s))
 
     # -- graceful degradation (§4.2.5) --------------------------------------
     def evict(self, cluster: ClusterView,
@@ -266,6 +278,13 @@ class VectorAcceLLMScheduler(AcceLLMScheduler):
         iids = (2 * pair_index, 2 * pair_index + 1)
         if not (st.usable(iids[0]) and st.usable(iids[1])):
             return []
+        # straggler hedging gates the regular rebalance exactly as in
+        # the scalar kernel — the O(1) health test runs first, and the
+        # hedge path itself (rare) reuses the scalar implementation so
+        # the decisions stay bit-identical
+        hedge = self._maybe_hedge(cluster, cluster.pairs()[pair_index])
+        if hedge is not None:
+            return hedge
         # trigger test from the cached per-side aggregates — the common
         # case (balanced pair) never materializes a single Item
         if not should_rebalance_agg(

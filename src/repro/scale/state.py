@@ -583,6 +583,15 @@ class ArrayClusterState:
         return np.fromiter((rec.mem_free() for rec in self.recs),
                            dtype=np.float64, count=len(self.recs))
 
+    def health_vec(self) -> np.ndarray:
+        """Per-instance health EWMA (``InstanceView.health``,
+        vectorized).  Read straight off the instances — health mutates
+        every iteration, so caching would only add invalidation
+        traffic."""
+        self._sync_instances()
+        return np.fromiter((rec.inst.health for rec in self.recs),
+                           dtype=np.float64, count=len(self.recs))
+
     def decode_counts(self) -> np.ndarray:
         self._sync_instances()
         return np.fromiter((len(rec.inst.decode_batch) for rec in self.recs),

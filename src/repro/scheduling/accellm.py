@@ -40,11 +40,19 @@ class AcceLLMScheduler(SchedulerPolicy):
     #: instance — the step planner raises on any mixed plan.
     allow_mixed = False
 
-    def __init__(self, redundancy: bool = True, swap_margin: int = 1):
+    def __init__(self, redundancy: bool = True, swap_margin: int = 1,
+                 hedging: bool = True, hedge_threshold: float = 1.5):
         self.redundancy = redundancy
         #: the partner only loses the primary role when it is more than
         #: ``swap_margin`` requests ahead of the prefilling side
         self.swap_margin = swap_margin
+        #: straggler hedging: when one pair side's health EWMA crosses
+        #: ``hedge_threshold`` (1.0 = nominal speed) and the other side
+        #: holds synced mirrors, decode routes to the mirrors via
+        #: zero-cost role flips — the paper's redundancy cashed in as a
+        #: tail-latency hedge.  Requires ``redundancy``.
+        self.hedging = hedging
+        self.hedge_threshold = hedge_threshold
         # decision log: inherited ``trace``/``_note`` (SchedulerPolicy)
 
     # -- routing (§4.2.2) ---------------------------------------------------
@@ -55,14 +63,36 @@ class AcceLLMScheduler(SchedulerPolicy):
         eligible = [p for p in cluster.pairs() if self._pair_can_accept(p, req)]
         if not eligible:
             return None
-        pair = max(eligible,
-                   key=lambda p: sum(v.mem_free() for v in p if usable(v)))
+        pair = max(eligible, key=self._pair_score)
         side = self.choose_prefill_side(pair, req)
         if side is None:
             return None
         target = pair[side].index
         self._note("route", req.rid, target)
         return target
+
+    def _pair_score(self, pair: PairView) -> float:
+        """Pair attractiveness for new admissions: free memory, scaled
+        down by the pair's worst health EWMA when hedging is on.  At
+        nominal health the division is by exactly 1.0, so the ranking
+        (and every golden trace without degradations) is unchanged; a
+        pair nursing a straggler stops soaking up new work just because
+        hedging freed its memory."""
+        free = sum(v.mem_free() for v in pair if usable(v))
+        if not self.hedging:
+            return float(free)
+        return free / max(self._health(pair[0]), self._health(pair[1]))
+
+    def _prefill_cost(self, view: InstanceView) -> float:
+        """Prefill-side preference: decode load, stretched by health
+        when hedging is on — a straggler only wins the prefill role if
+        preempting the healthy side's decode would cost more than
+        running the prompt ``health``x slow.  ``(load+1) * 1.0`` is
+        monotone in load, so nominal-health decisions are identical."""
+        load = view.decode_load()
+        if not self.hedging:
+            return float(load)
+        return (load + 1) * self._health(view)
 
     def _pair_can_accept(self, pair: PairView, req: RequestView) -> bool:
         sides = [v for v in pair if usable(v)]
@@ -92,7 +122,7 @@ class AcceLLMScheduler(SchedulerPolicy):
                 open_sides = [s for s in live_sides if pair[s].can_queue()]
             else:
                 return None
-        return min(open_sides, key=lambda s: (pair[s].decode_load(), s))
+        return min(open_sides, key=lambda s: (self._prefill_cost(pair[s]), s))
 
     def choose_roles(self, cluster: ClusterView, instance: int) -> str:
         inst = cluster.instances()[instance]
@@ -222,6 +252,52 @@ class AcceLLMScheduler(SchedulerPolicy):
             budget -= 1
         return actions
 
+    # -- straggler hedging (redundancy as a tail hedge) ----------------------
+    @staticmethod
+    def _health(view: InstanceView) -> float:
+        # getattr: bare test doubles predate the health view method
+        h = getattr(view, "health", None)
+        return h() if h is not None else 1.0
+
+    def _maybe_hedge(self, cluster: ClusterView, pair: PairView
+                     ) -> Optional[List[Action]]:
+        """Health-gated pair balancing.  Returns None when both sides
+        are nominal (the regular count+bytes rebalance applies); with a
+        straggler in the pair it returns the hedge actions — every
+        primary on the sick side whose mirror lives on the healthy side
+        flips roles there (catch-up delta first if the mirror lags) —
+        and the regular rebalance is suppressed so load balancing never
+        migrates work back onto the straggler."""
+        if not (self.hedging and self.redundancy):
+            return None
+        h0, h1 = self._health(pair[0]), self._health(pair[1])
+        if max(h0, h1) < self.hedge_threshold:
+            return None
+        if min(h0, h1) >= self.hedge_threshold:
+            return []            # both degraded: no healthy side to hedge to
+        sick = 0 if h0 > h1 else 1
+        well = 1 - sick
+        placements = cluster.placements()
+        synced = pair[well].replica_synced()
+        lines = pair[sick].request_lines()
+        actions: List[Action] = []
+        hedged = []
+        for rid in sorted(pair[sick].decode_weights()):
+            if placements.get(rid, (None, None))[1] != pair[well].index:
+                continue         # no mirror on the healthy side: must stall
+            s = synced.get(rid, 0)
+            ln = lines.get(rid, s)
+            if s < ln:
+                actions.append(MirrorSync(rid, pair[sick].index,
+                                          pair[well].index,
+                                          from_line=s, to_line=ln))
+            actions.append(PromoteReplica(rid, src=pair[sick].index,
+                                          dst=pair[well].index, hedge=True))
+            hedged.append((rid, pair[sick].index, pair[well].index))
+        if hedged:
+            self._note("hedge", tuple(hedged))
+        return actions
+
     # -- balancing by count + state bytes (§4.1.3) --------------------------
     def rebalance(self, cluster: ClusterView, pair_index: int
                   ) -> List[Action]:
@@ -230,6 +306,9 @@ class AcceLLMScheduler(SchedulerPolicy):
             # promotion shifts work between the sides; with one side
             # dead or cordoned there is nothing to balance against
             return []
+        hedge = self._maybe_hedge(cluster, pair)
+        if hedge is not None:
+            return hedge
         placements = cluster.placements()
         items = []
         for side, view in enumerate(pair):

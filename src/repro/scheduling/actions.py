@@ -80,10 +80,13 @@ class MirrorSync:
 class PromoteReplica:
     """Zero-cost role flip (AcceLLM §4.1.3): the replica of ``rid`` on
     ``dst`` becomes the primary; the old primary on ``src`` becomes the
-    replica."""
+    replica.  ``hedge`` marks a straggler hedge — the flip was taken
+    because ``src``'s health EWMA crossed the hedging threshold, not for
+    load balance; executors count these separately."""
     rid: int
     src: int
     dst: int
+    hedge: bool = False
 
 
 @dataclass(frozen=True)
@@ -95,5 +98,15 @@ class EvictReplica:
     instance: int
 
 
+@dataclass(frozen=True)
+class AbortRequest:
+    """Cancel ``rid`` wherever it is in its lifecycle — queued, mid
+    prefill chunk, or decoding.  Executors tear down *all* of its
+    serving state: ledger ``free`` of its blocks, prefix-cache unpin,
+    replica drop on the mirror, and planner cursor cleanup.  The request
+    record survives with ``Phase.ABORTED`` so metrics count it."""
+    rid: int
+
+
 Action = Union[Prefill, Decode, StreamState, MirrorSync, PromoteReplica,
-               EvictReplica]
+               EvictReplica, AbortRequest]

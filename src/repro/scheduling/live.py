@@ -18,11 +18,12 @@ from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
 
 from repro.configs.base import ModelConfig
-from repro.scheduling.actions import (Action, Decode, EvictReplica,
-                                      MirrorSync, Prefill, PromoteReplica,
-                                      StreamState)
+from repro.scheduling.actions import (AbortRequest, Action, Decode,
+                                      EvictReplica, MirrorSync, Prefill,
+                                      PromoteReplica, StreamState)
 from repro.scheduling.base import (ROLE_IDLE, ROLE_MIXED, ROLE_PREFILL,
                                    SchedulerPolicy)
+from repro.scheduling.views import step_health
 from repro.serving.engine import InstanceEngine
 from repro.serving.request import Phase, Request
 from repro.stepplan import (Planner, PrefillPlan, decode_part,
@@ -59,6 +60,9 @@ class LiveInstanceView:
 
     def draining(self) -> bool:
         return self._c.draining[self._index]
+
+    def health(self) -> float:
+        return self._c.health[self._index]
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> int:
@@ -197,13 +201,17 @@ class LiveCluster:
                  prefix_cache: bool = False,
                  prefix_cache_blocks: Optional[int] = None,
                  fleet: Optional["FleetController"] = None,
-                 mesh=None, timeline_stride: int = 1):
+                 mesh=None, timeline_stride: int = 1,
+                 max_queue: Optional[int] = None,
+                 shed_deadline: Optional[float] = None,
+                 degrade_dispatch_s: float = 0.0):
         if isinstance(policy, str):
             from repro.scheduling.registry import get_policy
             policy = get_policy(policy)
-        if policy.requires_pairs:
-            assert n_instances % 2 == 0, \
-                f"{policy.name} organizes instances in pairs"
+        if policy.requires_pairs and n_instances % 2 != 0:
+            raise ValueError(
+                f"{policy.name} organizes instances in pairs: got "
+                f"{n_instances} instances (need an even count)")
         self.cfg = cfg
         self.policy = policy
         self._params = params
@@ -241,6 +249,30 @@ class LiveCluster:
         #: stay in the list so indices remain stable
         self.alive: List[bool] = [True] * n_instances
         self.draining: List[bool] = [False] * n_instances
+        #: partial-failure state (repro.fleet DegradeInstance): modeled
+        #: compute slowdown factor (1.0 = nominal) and link slowdown for
+        #: transfers touching this instance
+        self.degrade: List[float] = [1.0] * n_instances
+        self.link_degrade: List[float] = [1.0] * n_instances
+        #: health EWMA the policy views expose — THE shared arithmetic
+        #: (repro.scheduling.views.step_health), updated once per
+        #: scheduling iteration for every alive instance so hedging
+        #: decisions replay bit-identically on the simulator
+        self.health: List[float] = [1.0] * n_instances
+        #: optional calibrated injection: each decode dispatch on a
+        #: degraded instance sleeps (factor-1) * this many wall seconds,
+        #: making the slowdown physically observable.  0.0 (default)
+        #: keeps CI and golden traces timing-free.
+        self.degrade_dispatch_s = degrade_dispatch_s
+        #: admission control: reject new arrivals once the backlog holds
+        #: this many requests (None = unbounded), and shed queued
+        #: requests whose wait already exceeds this many iterations
+        #: (None = never) — a request that cannot meet its TTFT deadline
+        #: is refused early instead of serving dead-on-arrival work
+        self.max_queue = max_queue
+        self.shed_deadline = shed_deadline
+        self.shed: List[Request] = []
+        self.aborted: List[Request] = []
         self.fleet = fleet
         self.queue: List[Tuple[Request, Optional[dict]]] = []
         self._pending: List[List[Tuple[Request, Optional[dict]]]] = [
@@ -296,7 +328,9 @@ class LiveCluster:
                       "mirror_syncs": 0, "mirror_bytes": 0.0,
                       "stream_bytes": 0.0, "evicted_blocks": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "stream_skipped_lines": 0}
+                      "stream_skipped_lines": 0,
+                      "sheds": 0, "aborts": 0, "hedges": 0,
+                      "pressure_aborts": 0}
 
     @property
     def now(self) -> float:
@@ -328,13 +362,126 @@ class LiveCluster:
         if extra is None:
             extra = req.extra
         if any(r.rid == req.rid for r in self._submitted
-               if r.finish_time is None):
+               if r.finish_time is None
+               and r.phase not in (Phase.SHED, Phase.ABORTED)):
             # placements/_reqs are keyed by rid; mixing source streams
             # (rids 0,1,...) with hand-built Requests (global counter)
             # must fail loudly, not corrupt another live request's state
             raise ValueError(f"request id {req.rid} is already in flight")
-        self.queue.append((req, extra))
         self._submitted.append(req)
+        if self.max_queue is not None \
+                and self.backlog_depth() >= self.max_queue:
+            # bounded admission: a full backlog sheds the arrival at the
+            # door (a deliberate, counted SLO miss — not a silent drop)
+            self._shed(req)
+            return
+        self.queue.append((req, extra))
+
+    def backlog_depth(self) -> int:
+        """Requests accepted but not yet fully prefilled — the admission
+        queue the ``max_queue`` bound applies to.  Mid-chunk prompts
+        count (the simulator keeps them in ``prefill_queue`` until the
+        final chunk, so both backends bound the same quantity)."""
+        return (len(self.queue) + sum(len(p) for p in self._pending)
+                + sum(len(c) for c in self._chunking))
+
+    def _shed(self, req: Request):
+        req.phase = Phase.SHED
+        self.shed.append(req)
+        self._extras.pop(req.rid, None)
+        self.stats["sheds"] += 1
+        ctrl = self._fleet_ctrl()
+        ctrl.note("shed", req.rid)
+        ctrl.stats["sheds"] += 1
+
+    def _shed_overdue(self):
+        """Deadline-aware shedding: queued requests whose wait already
+        exceeds ``shed_deadline`` iterations cannot meet their TTFT SLO
+        — refuse them now rather than burn prefill compute on
+        dead-on-arrival work.  Requests mid-chunk are executing and are
+        never shed."""
+        deadline = self.shed_deadline
+        keep: List[Tuple[Request, Optional[dict]]] = []
+        for req, extra in self.queue:
+            if self.now - req.arrival > deadline:
+                self._shed(req)
+            else:
+                keep.append((req, extra))
+        self.queue = keep
+        for idx, pending in enumerate(self._pending):
+            if not pending:
+                continue
+            keep = []
+            for req, extra in pending:
+                if (self.now - req.arrival > deadline
+                        and self.planner.cursor(req.rid) == 0):
+                    if req.prefix_hit is not None:
+                        self.engines[idx].prefix_abandon(req)
+                    self._shed(req)
+                else:
+                    keep.append((req, extra))
+            self._pending[idx] = keep
+
+    # -- abort lifecycle ------------------------------------------------------
+    def abort(self, rid: int) -> Optional[Request]:
+        """Cancel ``rid`` wherever it is in its lifecycle — queued,
+        routed, mid prefill chunk, or decoding — and tear down all of
+        its serving state: ledger blocks freed, prefix pin dropped,
+        replica released on the mirror, planner cursor forgotten.  The
+        request record survives with ``Phase.ABORTED`` so metrics count
+        it.  Returns the request, or None if ``rid`` is unknown."""
+        found: Optional[Request] = None
+        keep: List[Tuple[Request, Optional[dict]]] = []
+        for req, extra in self.queue:
+            if req.rid == rid:
+                found = req
+            else:
+                keep.append((req, extra))
+        self.queue = keep
+        for idx, pending in enumerate(self._pending):
+            keep = []
+            for req, extra in pending:
+                if req.rid == rid:
+                    found = req
+                    if req.prefix_hit is not None:
+                        self.engines[idx].prefix_abandon(req)
+                else:
+                    keep.append((req, extra))
+            self._pending[idx] = keep
+        for idx, chunking in enumerate(self._chunking):
+            for req in list(chunking):
+                if req.rid != rid:
+                    continue
+                found = req
+                chunking.remove(req)
+                eng = self.engines[idx]
+                for slot, r in list(eng.prefilling.items()):
+                    if r.rid == rid:
+                        eng.release(slot)
+                if req.prefix_hit is not None:
+                    eng.prefix_abandon(req)
+        pl = self.placements.pop(rid, None)
+        if pl is not None:
+            p_idx, p_slot = pl.primary
+            eng = self.engines[p_idx]
+            req = eng.slot_req.get(p_slot)
+            if req is not None and req.rid == rid:
+                found = req
+                eng.release(p_slot)
+            if pl.replica is not None:
+                r_idx, r_slot = pl.replica
+                self.engines[r_idx].release(r_slot)
+        found = self._reqs.pop(rid, found) or found
+        self._extras.pop(rid, None)
+        self.planner.forget(rid)
+        if found is not None:
+            found.phase = Phase.ABORTED
+            self.aborted.append(found)
+            self.stats["aborts"] += 1
+            ctrl = self._fleet_ctrl()
+            ctrl.note("abort", rid)
+            ctrl.stats["aborts"] += 1
+        return found
 
     # -- decode fusing --------------------------------------------------------
     def _fuse_budget(self) -> int:
@@ -385,6 +532,15 @@ class LiveCluster:
                 self._apply_fleet_event(ev)
         if any(self.draining):
             self._settle_drains()
+        # health EWMA: one update per alive instance per iteration, the
+        # same cadence the simulator uses, so hedging decisions gated on
+        # health replay bit-identically on both backends
+        for i in range(len(self.engines)):
+            if self.alive[i]:
+                self.health[i] = step_health(self.health[i],
+                                             self.degrade[i])
+        if self.shed_deadline is not None:
+            self._shed_overdue()
         if self.planner.max_fuse_steps > 1:
             self.planner.fuse_horizon = self._fuse_budget()
         view = LiveClusterView(self)
@@ -509,6 +665,18 @@ class LiveCluster:
             if dc is None or not self.engines[dc.instance].slot_req:
                 continue
             eng = self.engines[dc.instance]
+            # graceful-degradation ladder (§4.2.5) before the step can
+            # allocate: evict replicas, then abort least-progress work
+            self._relieve_pressure(dc.instance, view)
+            if not eng.slot_req:
+                continue
+            if self.degrade_dispatch_s > 0.0 \
+                    and self.degrade[dc.instance] > 1.0:
+                # calibrated physical injection: a degraded instance's
+                # dispatch really takes (factor-1) x the knob longer
+                import time
+                time.sleep((self.degrade[dc.instance] - 1.0)
+                           * self.degrade_dispatch_s)
             live = {s: eng.slot_req[s] for s in eng.active_slots()}
             out = eng.decode_multi(dc)
             if out:
@@ -600,15 +768,46 @@ class LiveCluster:
         return self.fleet
 
     def _apply_fleet_event(self, ev):
-        from repro.fleet import Drain, JoinInstance, KillInstance
+        from repro.fleet import (DegradeInstance, Drain, JoinInstance,
+                                 KillInstance, RecoverInstance)
         if isinstance(ev, KillInstance):
             self.fleet_kill(ev.instance)
         elif isinstance(ev, JoinInstance):
             self.fleet_join(ev.instance)
         elif isinstance(ev, Drain):
             self.fleet_drain(ev.instance)
+        elif isinstance(ev, DegradeInstance):
+            self.fleet_degrade(ev.instance, ev.factor, ev.link_factor)
+        elif isinstance(ev, RecoverInstance):
+            self.fleet_recover(ev.instance)
         else:
             raise ValueError(f"unknown fleet event {ev!r}")
+
+    def fleet_degrade(self, instance: int, factor: float = 4.0,
+                      link_factor: float = 1.0):
+        """Partial failure: the instance keeps serving but ``factor``x
+        slower (thermal throttling, a flapping NIC, a noisy neighbor).
+        Nothing is torn down — the health EWMA drifts up and hedging
+        kernels route decode around it."""
+        if instance >= len(self.engines) or not self.alive[instance]:
+            return
+        self.degrade[instance] = float(factor)
+        self.link_degrade[instance] = float(link_factor)
+        ctrl = self._fleet_ctrl()
+        ctrl.note("degrade", instance, float(factor), float(link_factor))
+        ctrl.stats["degrades"] += 1
+
+    def fleet_recover(self, instance: int):
+        """The degraded instance returns to nominal speed; its health
+        EWMA decays back under the hedge threshold over the next
+        iterations."""
+        if instance >= len(self.engines) or not self.alive[instance]:
+            return
+        self.degrade[instance] = 1.0
+        self.link_degrade[instance] = 1.0
+        ctrl = self._fleet_ctrl()
+        ctrl.note("recover", instance)
+        ctrl.stats["recoveries"] += 1
 
     def fleet_kill(self, instance: int):
         """Abrupt instance failure: every resident byte is gone.  The
@@ -687,6 +886,11 @@ class LiveCluster:
             dead.prefix_cache.release_all()
         self.alive[instance] = False
         self.draining[instance] = False
+        # partial-failure state dies with the instance: replacement
+        # hardware at this rank starts nominal
+        self.degrade[instance] = 1.0
+        self.link_degrade[instance] = 1.0
+        self.health[instance] = 1.0
 
     def fleet_join(self, instance: Optional[int] = None) -> int:
         """Register a fresh instance (revive a dead index, or append a
@@ -702,6 +906,9 @@ class LiveCluster:
             # engine (every slot freed at kill) is the fresh instance
             self.alive[idx] = True
             self.draining[idx] = False
+            self.degrade[idx] = 1.0
+            self.link_degrade[idx] = 1.0
+            self.health[idx] = 1.0
         else:
             idx = len(self.engines)
             # autoscaled joins land past the carved pod: unsharded,
@@ -716,6 +923,9 @@ class LiveCluster:
             self._chunking.append([])
             self.alive.append(True)
             self.draining.append(False)
+            self.degrade.append(1.0)
+            self.link_degrade.append(1.0)
+            self.health.append(1.0)
         ctrl.note("join", idx)
         ctrl.stats["joins"] += 1
         view = LiveClusterView(self)
@@ -807,6 +1017,8 @@ class LiveCluster:
             self._apply_promote(act)
         elif isinstance(act, EvictReplica):
             self._apply_evict(act)
+        elif isinstance(act, AbortRequest):
+            self.abort(act.rid)
         else:
             raise ValueError(f"live executor cannot apply {act!r}")
 
@@ -886,6 +1098,54 @@ class LiveCluster:
         pl.primary = (r_idx, r_slot)
         pl.replica = (p_idx, p_slot)
         self.stats["replica_promotions"] += 1
+        if act.hedge:
+            # straggler hedge, not a load-balance flip: counted apart so
+            # reports can tell redundancy-as-insurance from rebalancing
+            self.stats["hedges"] += 1
+            if self.fleet is not None:
+                self.fleet.stats["hedges"] += 1
+
+    def _relieve_pressure(self, idx: int, view):
+        """KV-pressure relief ladder (AcceLLM §4.2.5): before a decode
+        step, make sure the block pool can absorb one new line per
+        resident primary.  Rung 1 drops replicas hosted here (redundancy
+        is insurance, not an entitlement); rung 2 aborts the
+        least-progressed primaries — a deliberate, counted casualty
+        instead of an allocation failure mid-step."""
+        eng = self.engines[idx]
+        store = eng.store
+
+        def shortfall() -> int:
+            need = sum(1 for req in eng.slot_req.values()
+                       if store.lines(req.rid) % store.block_lines == 0)
+            return need - store.free_blocks()
+
+        if shortfall() <= 0:
+            return
+        iv = view.instances()[idx]
+        while shortfall() > 0 and eng.replica_of:
+            before = len(eng.replica_of)
+            for act in self.policy.evict(view, [iv]):
+                self._apply(act)
+            if len(eng.replica_of) == before:
+                # the policy won't name a victim: drop the heaviest
+                # replica directly rather than fail the decode step
+                slot = max(eng.replica_of,
+                           key=lambda s: store.used_bytes_of(
+                               store.slot_rid[s]))
+                rid = store.slot_rid[slot]
+                freed = eng.release(slot)
+                pl = self.placements.get(rid)
+                if pl is not None and pl.replica is not None \
+                        and pl.replica[0] == idx:
+                    pl.replica = None
+                self.stats["replica_evictions"] += 1
+                self.stats["evicted_blocks"] += freed
+        while shortfall() > 0 and len(eng.slot_req) > 1:
+            victim = min(eng.slot_req.values(),
+                         key=lambda r: (r.generated, r.rid))
+            self.abort(victim.rid)
+            self.stats["pressure_aborts"] += 1
 
     def _apply_evict(self, act: EvictReplica):
         pl = self.placements.get(act.rid)
@@ -940,7 +1200,10 @@ class LiveCluster:
             if it is not None and not exhausted:
                 if concurrency:
                     # closed loop: top in-flight back up to `concurrency`
+                    # (shed and aborted requests are terminal, not in
+                    # flight — they must not wedge the pump)
                     while (len(self._submitted) - len(self.finished)
+                           - len(self.shed) - len(self.aborted)
                            < concurrency):
                         req = next(it, None)
                         if req is None:

@@ -49,6 +49,17 @@ class InstanceView(Protocol):
         scale-down; see repro.fleet)."""
         ...
 
+    def health(self) -> float:
+        """Observed slowdown of this instance: an EWMA of its
+        per-iteration step latency, normalized so 1.0 is nominal speed
+        and ``k`` means steps are running ~``k``x slow.  Both backends
+        update it with the same arithmetic
+        (``health += HEALTH_ALPHA * (slowdown - health)``, once per
+        scheduling iteration while alive), so golden traces that branch
+        on health agree.  Kernels that hedge stragglers read this; the
+        health-blind baselines never call it."""
+        ...
+
     # -- capacity -----------------------------------------------------------
     def free_slots(self) -> int:
         """Free request slots (live) or residual batch slack (sim)."""
@@ -167,6 +178,20 @@ class InstanceView(Protocol):
         (e.g. a replica destination whose cache already holds the
         prefix) before the executor stamps the real hit."""
         ...
+
+
+#: EWMA smoothing for :meth:`InstanceView.health` — shared by both
+#: backends so the health signal (and every decision gated on it) is
+#: bit-identical live vs sim.  One degraded iteration at the default
+#: ``DegradeInstance.factor`` of 4.0 moves health from 1.0 to 2.5;
+#: recovery decays it back under the hedge threshold within two.
+HEALTH_ALPHA = 0.5
+
+
+def step_health(health: float, slowdown: float) -> float:
+    """One EWMA update of an instance's health toward its current
+    slowdown factor — THE health arithmetic, called by both executors."""
+    return health + HEALTH_ALPHA * (slowdown - health)
 
 
 def usable(view: InstanceView) -> bool:

@@ -14,6 +14,12 @@ class Phase(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     DONE = "done"
+    #: rejected by admission control (queue bound / deadline shed) —
+    #: terminal, never served; counts as an SLO miss, not a silent drop
+    SHED = "shed"
+    #: cancelled mid-flight by an ``AbortRequest`` — terminal; all
+    #: serving state (blocks, replicas, planner cursors) is torn down
+    ABORTED = "aborted"
 
 
 @dataclass

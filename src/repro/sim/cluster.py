@@ -17,6 +17,8 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.kvstore import SimStore
+from repro.scheduling.views import step_health
+from repro.serving.request import Phase
 from repro.sim.perf import PerfModel
 from repro.sim.workload import SimRequest
 from repro.stepplan import (DecodePlan, MixedPlan, PrefillPlan, StepPlan,
@@ -41,6 +43,14 @@ class SimInstance:
     alive: bool = True
     draining: bool = False
     epoch: int = 0
+    #: partial failure (repro.fleet.DegradeInstance): compute iterations
+    #: on this instance are priced ``degrade_factor`` x slow and its
+    #: transfers ``link_degrade`` x slow until a RecoverInstance lands
+    degrade_factor: float = 1.0
+    link_degrade: float = 1.0
+    #: health EWMA the scheduling views expose (1.0 = nominal) — the
+    #: same ``step_health`` arithmetic the live executor runs
+    health: float = 1.0
     #: sparse replica lag marks: rid -> synced line.  The sim prices the
     #: mirror inside the decode step, so replicas are current (and
     #: absent from this dict) unless a fleet event or an injected lag
@@ -175,11 +185,26 @@ class Policy:
         pass
 
     def on_fleet_event(self, ev, ctrl):
-        """Apply a :mod:`repro.fleet` event (kill / join / drain).
-        ``ctrl`` is the run's ``FleetController`` — the policy applies
-        the controller's failover plan to its own bookkeeping."""
+        """Apply a :mod:`repro.fleet` event (kill / join / drain /
+        degrade / recover).  ``ctrl`` is the run's ``FleetController`` —
+        the policy applies the controller's failover plan to its own
+        bookkeeping."""
         raise NotImplementedError(
             f"policy {self.name} has no fleet support")
+
+    def abort_request(self, rid: int) -> Optional[SimRequest]:
+        """Tear down every trace of ``rid`` (queue entry, decode
+        residency, replica, planner cursor, prefix pins); returns the
+        request record if it was found, None otherwise."""
+        raise NotImplementedError(
+            f"policy {self.name} has no abort support")
+
+    def shed_overdue(self, inst: SimInstance, now: float,
+                     deadline: float) -> List[SimRequest]:
+        """Remove (and return) backlogged requests on ``inst`` whose
+        queue wait already exceeds ``deadline`` — deadline-aware
+        admission shedding.  Only not-yet-started requests may shed."""
+        return []
 
     def settle_drains(self, ctrl):
         """Retire draining instances whose residents have completed
@@ -193,7 +218,9 @@ class Simulator:
                  max_batch: int = 64, block_lines: int = 16,
                  prefix_cache: bool = False,
                  prefix_cache_blocks: Optional[int] = None,
-                 timeline_stride: int = 1):
+                 timeline_stride: int = 1,
+                 max_queue: Optional[int] = None,
+                 shed_deadline: Optional[float] = None):
         # ``perf`` is one PerfModel for a homogeneous pod, or a sequence
         # of n_instances models for a heterogeneous one (e.g. H100-class
         # and 910B2-class slices scheduled by the same kernel)
@@ -230,6 +257,13 @@ class Simulator:
         self.finished: List[SimRequest] = []
         self.dropped: List[SimRequest] = []
         self.submitted: List[SimRequest] = []   # every request offered
+        # admission control: a bounded cluster-wide backlog plus
+        # deadline-aware shedding (a request whose queue wait already
+        # blew the TTFT budget is rejected, not served late)
+        self.max_queue = max_queue
+        self.shed_deadline = shed_deadline
+        self.shed: List[SimRequest] = []        # admission-control rejects
+        self.aborted: List[SimRequest] = []     # cancelled mid-flight
         self.timeline: List[TimelinePoint] = []
         #: sample the timeline every N events (1 = every event).  At
         #: 10^6-request scale a per-event list OOMs the report; metrics
@@ -295,23 +329,75 @@ class Simulator:
         self._kicking.add(inst.iid)
         self._sched_begin()
         try:
+            if self.shed_deadline is not None and inst.prefill_queue:
+                for r in self.policy.shed_overdue(inst, self.now,
+                                                  self.shed_deadline):
+                    self._shed(r)
             plan = self.policy.next_plan(inst)
         finally:
             self._sched_end()
             self._kicking.discard(inst.iid)
         if plan is None:
+            # an idle kick still observes the instance: health keeps
+            # converging toward the current degrade factor, so a fully
+            # hedged-away straggler that later recovers decays back
+            # under the hedge threshold (the live executor updates
+            # every alive instance once per step; events are the sim's
+            # step boundary) instead of freezing sick and suppressing
+            # its pair's rebalance forever
+            inst.health = step_health(inst.health, inst.degrade_factor)
             return
         # ONE cost entry point for every iteration shape (ISSUE 4
         # acceptance): the plan the adapter compiled is priced as-is,
-        # on the hardware of the instance that runs it.
+        # on the hardware of the instance that runs it.  A degraded
+        # instance (repro.fleet.DegradeInstance) runs the identical plan
+        # degrade_factor x slow, and its health EWMA tracks the slowdown
+        # one iteration at a time — the signal hedging kernels read.
         dur = inst.perf.plan_time(plan)
+        if inst.degrade_factor != 1.0:
+            dur *= inst.degrade_factor
+        inst.health = step_health(inst.health, inst.degrade_factor)
         inst.busy = True
         inst.busy_time += dur
         inst._running = (plan, tuple(inst.decode_batch), self.now)
         self.push(self.now + dur, "inst_done", (inst.iid, inst.epoch))
 
+    # -- admission control / abort ------------------------------------------------
+    def _shed(self, req: SimRequest):
+        """Admission-control reject: terminal, counted (Phase.SHED stays
+        in ``submitted`` so slo_summary scores it as a miss)."""
+        req.phase = Phase.SHED
+        self.shed.append(req)
+        if self.fleet is not None:
+            self.fleet.note("shed", req.rid)
+            self.fleet.stats["sheds"] += 1
+
+    def backlog_depth(self) -> int:
+        """Cluster-wide admission backlog (requests routed but not yet
+        prefilled) — what ``max_queue`` bounds."""
+        return sum(len(i.prefill_queue) for i in self.instances)
+
+    def abort(self, rid: int) -> Optional[SimRequest]:
+        """First-class cancel: tear down ``rid``'s serving state
+        everywhere via the policy, stamp it ``Phase.ABORTED``."""
+        self._sched_begin()
+        try:
+            req = self.policy.abort_request(rid)
+        finally:
+            self._sched_end()
+        if req is not None:
+            self.aborted.append(req)
+            if self.fleet is not None:
+                self.fleet.note("abort", rid)
+                self.fleet.stats["aborts"] += 1
+        return req
+
     # -- event handlers -----------------------------------------------------------
     def _handle_arrival(self, req: SimRequest):
+        if (self.max_queue is not None
+                and self.backlog_depth() >= self.max_queue):
+            self._shed(req)
+            return
         self._sched_begin()
         try:
             inst = self.policy.route(req)
@@ -339,7 +425,10 @@ class Simulator:
             # (they left the queue when the plan was compiled); partial
             # chunks keep their request queued — the planner's cursor
             # resumes it next iteration
-            reqs = [it.req for it in pf.items if it.completes]
+            # an aborted request's in-flight chunk still burns the time
+            # it was priced at, but its completion is void
+            reqs = [it.req for it in pf.items
+                    if it.completes and it.req.phase is not Phase.ABORTED]
             for r in reqs:
                 r.first_token_time = self.now
                 r.token_times.append(self.now)
@@ -388,6 +477,8 @@ class Simulator:
     def _handle_join(self, data):
         iid, req = data
         inst = self.instances[iid]
+        if req.phase is Phase.ABORTED:
+            return      # cancelled while its KV transfer was in flight
         if not inst.alive or inst.draining:
             # the decode target died/cordoned while the KV transfer was
             # in flight: the state is lost, the request re-prefills
@@ -427,6 +518,7 @@ class Simulator:
     def _pump_refill(self):
         while (self._pump is not None
                and self._pump_issued - len(self.finished) - len(self.dropped)
+               - len(self.shed) - len(self.aborted)
                < self._pump_target):
             r = next(self._pump, None)
             if r is None:
@@ -483,6 +575,8 @@ class Simulator:
                 self._handle_done(data)
             elif kind == "join_decode":
                 self._handle_join(data)
+            elif kind == "abort":
+                self.abort(data)
             elif kind == "fleet":
                 self.policy.on_fleet_event(data, self.fleet)
             if self.fleet is not None and any(i.draining

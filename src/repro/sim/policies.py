@@ -33,7 +33,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from repro.fleet import (Drain, FleetController, JoinInstance, KillInstance,
+from repro.fleet import (DegradeInstance, Drain, FleetController,
+                         JoinInstance, KillInstance, RecoverInstance,
                          reset_for_reprefill, rollback_tokens)
 from repro.scheduling.accellm import AcceLLMScheduler
 from repro.scheduling.actions import (Action, Decode, EvictReplica,
@@ -95,6 +96,11 @@ class SimInstanceView:
 
     def draining(self) -> bool:
         return self._i.draining
+
+    def health(self) -> float:
+        # EWMA slowdown (1.0 = nominal), updated by the event loop with
+        # the shared step_health arithmetic (see scheduling.views)
+        return self._i.health
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> int:
@@ -389,8 +395,90 @@ class KernelPolicy(Policy):
             self._fleet_join(ev.instance, ctrl)
         elif isinstance(ev, Drain):
             self._fleet_drain(ev.instance, ctrl)
+        elif isinstance(ev, DegradeInstance):
+            self._fleet_degrade(ev.instance, ev.factor, ev.link_factor, ctrl)
+        elif isinstance(ev, RecoverInstance):
+            self._fleet_recover(ev.instance, ctrl)
         else:
             raise ValueError(f"unknown fleet event {ev!r}")
+
+    def _fleet_degrade(self, iid: int, factor: float, link_factor: float,
+                       ctrl: FleetController):
+        """Partial failure: the instance keeps serving, just slower.  No
+        state moves here — the health EWMA surfaces the slowdown to the
+        kernels, and hedging kernels react to it."""
+        inst = self.sim.instances[iid]
+        if not inst.alive:
+            return
+        inst.degrade_factor = float(factor)
+        inst.link_degrade = float(link_factor)
+        ctrl.note("degrade", iid, float(factor), float(link_factor))
+        ctrl.stats["degrades"] += 1
+        # observe immediately if idle: health starts converging to the
+        # new factor without waiting for the next arrival/completion
+        self.sim.kick(inst)
+
+    def _fleet_recover(self, iid: int, ctrl: FleetController):
+        inst = self.sim.instances[iid]
+        if not inst.alive:
+            return
+        inst.degrade_factor = 1.0
+        inst.link_degrade = 1.0
+        ctrl.note("recover", iid)
+        ctrl.stats["recoveries"] += 1
+        self.sim.kick(inst)
+
+    # -- abort lifecycle / deadline shedding ----------------------------------
+    def abort_request(self, rid: int) -> Optional[SimRequest]:
+        """First-class cancel: remove every trace of ``rid`` — queue
+        entry, decode residency, replica + lag marks, prefix pins,
+        planner cursor, placement — on every instance.  The ledgers
+        reconcile to the shrunken resident sets on next read, so the
+        blocks are freed with zero leakage."""
+        from repro.serving.request import Phase
+        found: Optional[SimRequest] = None
+        for inst in self.sim.instances:
+            for r in list(inst.prefill_queue):
+                if r.rid == rid:
+                    inst.prefill_queue = [q for q in inst.prefill_queue
+                                          if q.rid != rid]
+                    found = r
+            r = inst.decode_batch.pop(rid, None)
+            if r is not None:
+                found = r
+            r = inst.replicas.pop(rid, None)
+            if r is not None:
+                found = found or r
+            inst.synced_marks.pop(rid, None)
+            inst.hit_runs.pop(rid, None)
+            inst.shared_runs.pop(rid, None)
+            if inst.prefix_cache is not None:
+                inst.prefix_cache.unpin(rid)
+        self.placement.pop(rid, None)
+        self.planner.forget(rid)
+        if found is not None:
+            found.phase = Phase.ABORTED
+        return found
+
+    def shed_overdue(self, inst: SimInstance, now: float,
+                     deadline: float) -> List[SimRequest]:
+        """Deadline-aware admission: a backlogged request whose queue
+        wait already exceeds ``deadline`` will blow TTFT no matter what
+        — reject it now instead of serving it late.  Prompts mid-chunk
+        (planner cursor > 0) are executing, not waiting: never shed."""
+        overdue = [r for r in inst.prefill_queue
+                   if now - r.arrival > deadline
+                   and self.planner.cursor(r.rid) == 0]
+        if not overdue:
+            return []
+        gone = {r.rid for r in overdue}
+        inst.prefill_queue = [r for r in inst.prefill_queue
+                              if r.rid not in gone]
+        for r in overdue:
+            inst.hit_runs.pop(r.rid, None)
+            if inst.prefix_cache is not None:
+                inst.prefix_cache.unpin(r.rid)
+        return overdue
 
     def _rebind_topology(self):
         """Membership changed (join appended an instance / revived an
@@ -672,6 +760,9 @@ class SplitwisePolicy(KernelPolicy):
                    else StreamState(r.rid, src=inst.iid, dst=inst.iid))
             dt = inst.perf.plan_time(TransferPlan(
                 inst.iid, act, lines=r.prompt_len, overlap_layers=False))
+            # a browned-out link (DegradeInstance.link_factor) stretches
+            # the un-overlapped KV handoff
+            dt *= inst.link_degrade
             # the request leaves for its decode instance: the prefill
             # instance's cache still indexes the prompt head it computed
             self._note_prefilled(inst, r)
@@ -697,8 +788,10 @@ class AcceLLMPolicy(KernelPolicy):
 
     def bind(self, sim):
         super().bind(sim)
-        assert len(sim.instances) % 2 == 0, \
-            "AcceLLM organizes instances in pairs"
+        if len(sim.instances) % 2 != 0:
+            raise ValueError(
+                f"{self.name} organizes instances in pairs: got "
+                f"{len(sim.instances)} instances (need an even count)")
         self._rebind_topology()
 
     def _rebind_topology(self):
@@ -830,7 +923,16 @@ class AcceLLMPolicy(KernelPolicy):
         if pair is None:
             return
         pa, pb = pair
-        if pa.busy or pb.busy:
+        if pa.busy and pb.busy:
+            return
+        if (pa.busy or pb.busy) and not self._hedge_pending(pa, pb):
+            # regular balancing waits for a fully idle pair; a pending
+            # straggler hedge must not — the hedge window IS the window
+            # in which the sick side is grinding a slow iteration.
+            # Moving a request off a busy instance is safe under the
+            # snapshot semantics of _handle_done (same as abort): the
+            # in-flight iteration simply stops crediting it tokens, and
+            # it resumes on the healthy side's next kick.
             return
         actions = self.kernel.rebalance(self.view(), inst.iid // 2)
         for act in actions:
@@ -850,9 +952,20 @@ class AcceLLMPolicy(KernelPolicy):
             dst.synced_marks.pop(act.rid, None)
             src.replicas[act.rid] = r
             self.placement[act.rid] = (act.dst, act.src)
+            if act.hedge and self.sim.fleet is not None:
+                self.sim.fleet.stats["hedges"] += 1
         if actions:
             self.sim.kick(pa)
             self.sim.kick(pb)
+
+    def _hedge_pending(self, pa, pb) -> bool:
+        """Exactly one pair side's health EWMA is over the kernel's
+        hedge threshold — the only situation in which the kernel would
+        emit hedge flips rather than regular balancing moves."""
+        thr = getattr(self.kernel, "hedge_threshold", None)
+        if thr is None or not getattr(self.kernel, "hedging", False):
+            return False
+        return max(pa.health, pb.health) >= thr > min(pa.health, pb.health)
 
     # -- graceful degradation (§4.2.5) ----------------------------------------
     def _evict_replica(self, inst):

@@ -37,31 +37,42 @@ class SLOSummary:
     n_submitted: int
     n_finished: int
     n_unfinished: int
-    #: fraction of *submitted* requests meeting every target (unfinished
-    #: requests count as misses — an open-loop run that falls behind must
-    #: not look healthy just because the stragglers never completed)
+    #: fraction of *submitted* requests meeting every target (unfinished,
+    #: shed and aborted requests all count as misses — an overloaded run
+    #: that refuses work at the door must not look healthy because the
+    #: refusals never completed: a shed request IS an SLO miss)
     attainment: float
     attainment_ttft: float      # fraction of finished meeting the TTFT target
     attainment_tbt: float       # fraction of finished meeting the TBT target
     goodput: float              # SLO-compliant requests per time unit
     unit: str = "units"
+    #: admission control refused these (bounded queue / deadline shed)
+    n_shed: int = 0
+    #: torn down mid-flight (client cancel or KV-pressure abort)
+    n_aborted: int = 0
 
     def describe(self) -> str:
+        extra = ""
+        if self.n_shed or self.n_aborted:
+            extra = f", {self.n_shed} shed, {self.n_aborted} aborted"
         return (f"SLO attainment={self.attainment:.1%} "
                 f"(ttft={self.attainment_ttft:.1%}, "
                 f"tbt={self.attainment_tbt:.1%}); "
                 f"goodput={self.goodput:.3f} req/{self.unit} "
                 f"[{self.n_finished} finished, "
-                f"{self.n_unfinished} unfinished]")
+                f"{self.n_unfinished} unfinished{extra}]")
 
 
 def slo_summary(requests: Iterable, slo: SLO, duration: float,
                 unit: str = "units") -> SLOSummary:
     """Score a request set (finished or not) against ``slo`` over the run's
     ``duration`` in backend clock units."""
+    from repro.serving.request import Phase
     reqs = list(requests)
     finished = [r for r in reqs if r.finish_time is not None]
-    unfinished = len(reqs) - len(finished)
+    n_shed = sum(1 for r in reqs if r.phase is Phase.SHED)
+    n_aborted = sum(1 for r in reqs if r.phase is Phase.ABORTED)
+    unfinished = len(reqs) - len(finished) - n_shed - n_aborted
     good = ok_ttft = ok_tbt = 0
     for r in finished:
         ttft, tbts = r.ttft(), r.tbts()
@@ -78,7 +89,7 @@ def slo_summary(requests: Iterable, slo: SLO, duration: float,
         attainment_ttft=ok_ttft / nf if nf else math.nan,
         attainment_tbt=ok_tbt / nf if nf else math.nan,
         goodput=good / duration if duration > 0 else math.nan,
-        unit=unit,
+        unit=unit, n_shed=n_shed, n_aborted=n_aborted,
     )
 
 

@@ -1,0 +1,658 @@
+"""Graceful degradation layer: straggler hedging via redundancy,
+deadline-aware admission control, and the request abort lifecycle.
+
+The load-bearing check mirrors test_fleet's golden trace: the same
+arrival script with a mid-serve degrade, an abort and a queue-full shed
+must produce the IDENTICAL kernel trace (route/place/hedge) AND the
+identical fleet-controller trace (degrade/abort/shed/recover) with the
+identical counters whether the events hit the live-engine executor or
+the simulator adapter — and neither backend may leak a single ledger
+block for a shed or aborted request.
+"""
+import heapq
+
+import jax
+import pytest
+from _propcheck import given, settings, st
+
+from repro.configs import get_config
+from repro.fleet import (DegradeInstance, FixedFleet, FleetController,
+                         JoinInstance, KillInstance, PoissonDegradations,
+                         RecoverInstance, load_fleet_trace, save_fleet_trace)
+from repro.models import init_params
+from repro.scheduling import AcceLLMScheduler, LiveCluster
+from repro.scheduling.registry import get_policy
+from repro.scheduling.views import HEALTH_ALPHA, step_health
+from repro.serving import Request
+from repro.serving.request import Phase
+from repro.sim import (H100, AcceLLMPolicy, InstanceSpec, PerfModel,
+                       Simulator, SimRequest)
+from repro.workloads import SLO, Bursty, TableLengths, WorkloadSpec, \
+    slo_summary
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _perf(cfg=None):
+    return PerfModel(cfg or get_config("llama2-70b"), InstanceSpec(H100, 4))
+
+
+# ---------------------------------------------------------------------------
+# schedules: seeded degradation streams + JSONL round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_degradations_seeded_and_bounded():
+    sched = PoissonDegradations(mtbf=5.0, duration=100.0, n_instances=4,
+                                recovery=3.0, factor=6.0)
+    a, b = sched.stream(seed=0), sched.stream(seed=0)
+    assert a == b, "same seed must replay the identical straggler stream"
+    assert a != sched.stream(seed=1)
+    degrades = [e for e in a if isinstance(e, DegradeInstance)]
+    recovers = [e for e in a if isinstance(e, RecoverInstance)]
+    assert degrades, "mtbf=5 over 100 units must produce stragglers"
+    assert all(0.0 < e.t < 100.0 for e in degrades)
+    assert all(0 <= e.instance < 4 for e in degrades)
+    assert all(e.factor == 6.0 for e in degrades)
+    # each degrade is followed by a recovery of the same instance
+    assert len(recovers) == len(degrades)
+    assert [e.t for e in a] == sorted(e.t for e in a), "stream() sorts"
+    # no recovery -> permanent stragglers
+    dark = PoissonDegradations(mtbf=5.0, duration=100.0, n_instances=4)
+    assert all(isinstance(e, DegradeInstance) for e in dark.stream(seed=0))
+
+
+def test_degrade_trace_jsonl_round_trip(tmp_path):
+    events = [DegradeInstance(1.5, 2, 3.0, 2.0), KillInstance(2.0, 1),
+              RecoverInstance(4.0, 2), JoinInstance(5.0, 1)]
+    path = tmp_path / "fleet.jsonl"
+    assert save_fleet_trace(path, events) == 4
+    loaded = load_fleet_trace(path)
+    assert loaded.stream(seed=0) == events, \
+        "factor/link_factor must round-trip through JSONL"
+
+
+# ---------------------------------------------------------------------------
+# health EWMA: the shared arithmetic both executors call
+# ---------------------------------------------------------------------------
+
+
+def test_step_health_identity_and_decay():
+    # nominal speed is a fixed point
+    assert step_health(1.0, 1.0) == 1.0
+    # one degraded iteration at the default factor crosses the default
+    # hedge threshold (1.5) immediately
+    h = step_health(1.0, 4.0)
+    assert h == 1.0 + HEALTH_ALPHA * 3.0 == 2.5
+    assert h >= AcceLLMScheduler().hedge_threshold
+    # recovery decays it back under the threshold within two iterations
+    h = step_health(h, 1.0)
+    assert h == 1.75
+    h = step_health(h, 1.0)
+    assert h == 1.375 < AcceLLMScheduler().hedge_threshold
+
+
+def test_live_health_tracks_degrade_and_recover(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=4,
+                          kv_capacity=128, policy=AcceLLMScheduler())
+    cluster.fleet_degrade(0, factor=4.0, link_factor=2.0)
+    assert cluster.degrade[0] == 4.0 and cluster.link_degrade[0] == 2.0
+    cluster.step()
+    assert cluster.health[0] == 2.5 and cluster.health[1] == 1.0
+    cluster.fleet_recover(0)
+    cluster.step()
+    cluster.step()
+    assert cluster.health[0] == 1.375
+    trace = cluster.fleet.trace
+    assert ("degrade", 0, 4.0, 2.0) in trace and ("recover", 0) in trace
+    assert cluster.fleet.stats["degrades"] == 1
+    assert cluster.fleet.stats["recoveries"] == 1
+    # degrading a dead instance is a no-op, not a crash
+    cluster.fleet_kill(1)
+    cluster.fleet_degrade(1)
+    assert cluster.degrade[1] == 1.0
+
+
+def test_sim_health_tracks_degrade_through_event_loop():
+    reqs = [SimRequest(rid=i, arrival=0.0, prompt_len=16, decode_len=64)
+            for i in range(4)]
+    fleet = FleetController(FixedFleet((DegradeInstance(0.05, 0, 4.0),)))
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=2)
+    sim.run(requests=reqs, horizon=600.0, fleet=fleet)
+    assert fleet.stats["degrades"] == 1
+    assert sim.instances[0].health > 1.5, \
+        "the degraded instance's EWMA must track its slowdown"
+    assert sim.instances[1].health == 1.0
+    assert len(sim.finished) == 4
+
+
+# ---------------------------------------------------------------------------
+# satellite: pair-count validation raises, not asserts
+# ---------------------------------------------------------------------------
+
+
+def test_odd_instances_raise_value_error(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="pairs"):
+        LiveCluster(cfg, params, n_instances=3, num_slots=4,
+                    kv_capacity=128, policy=AcceLLMScheduler())
+    with pytest.raises(ValueError, match="pairs"):
+        Simulator(AcceLLMPolicy(), _perf(), n_instances=3)
+
+
+def test_config_validation_raises_value_error():
+    import dataclasses
+    base = get_config("starcoder2-3b")
+    with pytest.raises(ValueError, match="block_pattern"):
+        dataclasses.replace(base, block_pattern=("attn",) * (base.num_layers
+                                                             + 1))
+    with pytest.raises(ValueError, match="divisible"):
+        dataclasses.replace(base, num_heads=5, num_kv_heads=2, head_dim=16)
+    with pytest.raises(ValueError, match="unknown block kind"):
+        dataclasses.replace(base,
+                            block_pattern=("nope",) * base.num_layers)
+
+
+# ---------------------------------------------------------------------------
+# golden degrade trace: live executor vs simulator adapter, same script
+# ---------------------------------------------------------------------------
+
+# arrivals keep both pair sides loaded; a degrade turns instance 0 into a
+# straggler (hedge flips its primaries to their mirrors on instance 1), a
+# decoding request is aborted mid-flight, the straggler recovers, then a
+# burst against the bounded queue sheds exactly one arrival at the door
+_CHAOS_SCRIPT = [
+    ("arrive", 8, 14), ("tick",),
+    ("arrive", 10, 14), ("tick",),
+    ("arrive", 6, 12), ("tick",),
+    ("tick",),
+    ("degrade", 0, 4.0),
+    ("tick",),              # health[0] -> 2.5: hedge fires this iteration
+    ("tick",),
+    ("abort", 1),           # cancel a decoding request mid-flight
+    ("tick",),
+    ("recover", 0),
+    ("tick",), ("tick",),   # health decays back under the threshold
+    ("arrive", 7, 6), ("arrive", 9, 6), ("arrive", 6, 6),  # third one sheds
+    ("tick",), ("tick",),
+]
+_MAX_QUEUE = 2
+
+
+def _run_live_chaos(cfg, params, kernel, script):
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=kernel,
+                          max_queue=_MAX_QUEUE)
+    key = jax.random.PRNGKey(7)
+    rids, reqs = [], []
+    for i, op in enumerate(script):
+        if op[0] == "arrive":
+            plen, dlen = op[1], op[2]
+            req = Request(prompt_len=plen, max_new_tokens=dlen,
+                          prompt_tokens=jax.random.randint(
+                              jax.random.fold_in(key, i), (1, plen), 0,
+                              cfg.vocab_size))
+            rids.append(req.rid)
+            reqs.append(req)
+            cluster.submit(req)
+        elif op[0] == "degrade":
+            cluster.fleet_degrade(op[1], op[2])
+        elif op[0] == "recover":
+            cluster.fleet_recover(op[1])
+        elif op[0] == "abort":
+            cluster.abort(rids[op[1]])
+        elif op[0] == "tick":
+            cluster.step()
+    steps = 0
+    while cluster.pending() and steps < 200:
+        cluster.step()
+        steps += 1
+    assert not cluster.pending()
+    return cluster, rids, reqs, steps
+
+
+def _run_sim_chaos(cfg, rids, extra_steps, script):
+    """Lock-step simulator drive of the same script (the test_fleet
+    harness plus degradation ops): the health EWMA advances once per
+    step for every alive instance — the live executor's cadence — and
+    sheds/aborts note into the same controller."""
+    kernel = AcceLLMScheduler()
+    kernel.trace = []
+    sim = Simulator(AcceLLMPolicy(kernel=kernel), _perf(cfg), n_instances=2)
+    sim.kick = lambda inst: None          # event mechanics not under test
+    pol = sim.policy
+    ctrl = FleetController()
+    sim.fleet = ctrl                      # sheds/hedges count here
+
+    def tick(skip_iid=None):
+        finished = {}
+        for inst in sim.instances:
+            if not inst.alive or inst.iid == skip_iid:
+                continue
+            done_here = []
+            for rid, r in list(inst.decode_batch.items()):
+                r.generated += 1
+                if r.done:
+                    del inst.decode_batch[rid]
+                    done_here.append(r)
+            finished[inst.iid] = done_here
+        for inst in sim.instances:
+            if inst.iid in finished:
+                pol.on_decode_done(inst, finished[inst.iid])
+
+    queue = []
+
+    def step_once():
+        # live updates every alive instance's health at the top of step()
+        for inst in sim.instances:
+            if inst.alive:
+                inst.health = step_health(inst.health, inst.degrade_factor)
+        skip = None
+        if queue:                          # admissions_per_step == 1
+            r = queue[0]
+            inst = pol.route(r)
+            if inst is not None:
+                queue.pop(0)
+                r.generated = 1            # the prefill's first token
+                pol.on_prefill_done(inst, [r])
+                skip = inst.iid
+        tick(skip_iid=skip)
+
+    arrivals = iter(rids)
+    for op in script:
+        if op[0] == "arrive":
+            r = SimRequest(rid=next(arrivals), arrival=0.0,
+                           prompt_len=op[1], decode_len=op[2])
+            if len(queue) >= _MAX_QUEUE:   # the live door check
+                sim._shed(r)
+                continue
+            queue.append(r)
+        elif op[0] == "degrade":
+            pol._fleet_degrade(op[1], op[2], 1.0, ctrl)
+        elif op[0] == "recover":
+            pol._fleet_recover(op[1], ctrl)
+        elif op[0] == "abort":
+            rid = rids[op[1]]
+            held = [r for r in queue if r.rid == rid]
+            if held:
+                queue.remove(held[0])
+                held[0].phase = Phase.ABORTED
+                sim.aborted.append(held[0])
+                ctrl.note("abort", rid)
+                ctrl.stats["aborts"] += 1
+            else:
+                sim.abort(rid)
+        if op[0] == "tick":          # the live harness only steps on ticks
+            step_once()
+    for _ in range(extra_steps):
+        step_once()
+    return kernel.trace, ctrl, sim
+
+
+def test_golden_degrade_trace_live_vs_sim(setup):
+    cfg, params = setup
+    live_kernel = AcceLLMScheduler()
+    live_kernel.trace = []
+    cluster, rids, reqs, extra = _run_live_chaos(cfg, params, live_kernel,
+                                                 _CHAOS_SCRIPT)
+    sim_trace, sim_ctrl, sim = _run_sim_chaos(cfg, rids, extra,
+                                              _CHAOS_SCRIPT)
+
+    assert live_kernel.trace == sim_trace, (
+        "shared kernel diverged across backends under degradation:\n"
+        f"live: {live_kernel.trace}\nsim:  {sim_trace}")
+    live_ctrl = cluster.fleet
+    assert live_ctrl.trace == sim_ctrl.trace, (
+        "degradation lifecycle diverged:\n"
+        f"live: {live_ctrl.trace}\nsim:  {sim_ctrl.trace}")
+    assert live_ctrl.stats == sim_ctrl.stats
+
+    # the script's events all fired, on both backends identically
+    assert live_ctrl.stats["degrades"] == 1
+    assert live_ctrl.stats["recoveries"] == 1
+    assert live_ctrl.stats["aborts"] == 1
+    assert live_ctrl.stats["sheds"] == 1
+    assert live_ctrl.stats["hedges"] > 0, \
+        "the degraded side's primaries must hedge to their mirrors"
+    assert "hedge" in {e[0] for e in live_kernel.trace}
+
+    # terminal accounting: every submitted request is finished, shed or
+    # aborted — and the outcomes agree with the script
+    aborted_rid = rids[1]
+    assert [r.rid for r in cluster.aborted] == [aborted_rid]
+    assert len(cluster.shed) == 1
+    n_terminal = 0
+    for r in reqs:
+        if r.phase in (Phase.SHED, Phase.ABORTED):
+            n_terminal += 1
+            continue
+        assert len(r.output_tokens) == r.max_new_tokens
+        n_terminal += 1
+    assert n_terminal == len(reqs)
+    assert {r.rid for r in sim.aborted} == {aborted_rid}
+    assert len(sim.shed) == 1
+
+    # zero leaked ledger blocks after the aborts, on both backends
+    for eng in cluster.engines:
+        assert aborted_rid not in eng.store.ledger.tables
+        assert eng.store.ledger.used_blocks() == 0
+    for inst in sim.instances:
+        led = inst.synced_store().ledger
+        assert aborted_rid not in led.tables
+        assert led.used_blocks() == 0
+    assert aborted_rid not in cluster.placements
+    assert aborted_rid not in sim.policy.placement
+
+
+# ---------------------------------------------------------------------------
+# satellite: vec kernels + array state stay coherent through chaos
+# ---------------------------------------------------------------------------
+
+_CHAOS_FLEET = FixedFleet((
+    DegradeInstance(4.0, 1, 4.0), KillInstance(10.0, 2),
+    RecoverInstance(14.0, 1), JoinInstance(18.0, 2),
+    DegradeInstance(22.0, 0, 3.0), RecoverInstance(30.0, 0),
+))
+
+_CHAOS_SPEC = WorkloadSpec(
+    arrival=Bursty(rate_on=12.0, duration=40.0, rate_off=2.0,
+                   mean_on=6.0, mean_off=4.0),
+    lengths=TableLengths(workload="mixed"), name="bursty")
+
+
+def _run_chaos_traced(policy, max_queue=None):
+    policy.kernel.trace = []
+    sim = Simulator(policy, _perf(), n_instances=4, max_queue=max_queue)
+    ctrl = FleetController(_CHAOS_FLEET)
+    sim.run(source=_CHAOS_SPEC.source(seed=0), horizon=500.0, fleet=ctrl)
+    return policy.kernel.trace, sim, ctrl
+
+
+def test_vec_scalar_coherent_across_kill_join_degrade():
+    """Satellite regression: the array-backed kernel must make the
+    identical decisions through an interleaved kill -> join -> degrade
+    chaos run — membership arrays, replica arrays AND the health vector
+    all have to stay coherent with the dict state."""
+    tr_s, sim_s, ctrl_s = _run_chaos_traced(AcceLLMPolicy())
+    tr_v, sim_v, ctrl_v = _run_chaos_traced(
+        AcceLLMPolicy(kernel=get_policy("accellm-vec")))
+    assert len(tr_s) > 50, "trace must exercise real scheduling"
+    assert tr_s == tr_v, (
+        "vectorized kernel diverged from dict-backed under chaos at entry "
+        f"{next((i for i, (a, b) in enumerate(zip(tr_s, tr_v)) if a != b), 'len')}")
+    assert ctrl_s.trace == ctrl_v.trace
+    assert ctrl_s.stats == ctrl_v.stats
+    assert ctrl_s.stats["degrades"] == 2 and ctrl_s.stats["kills"] == 1
+    fp = lambda sim: [(r.rid, r.generated, r.finish_time)
+                      for r in sorted(sim.submitted, key=lambda r: r.rid)]
+    assert fp(sim_s) == fp(sim_v)
+    # the array state's health vector mirrors the instances exactly
+    arrays = sim_v.policy.arrays
+    assert arrays is not None
+    assert list(arrays.health_vec()) == [i.health for i in sim_v.instances]
+
+
+# ---------------------------------------------------------------------------
+# satellite: property test — chaos interleavings conserve the ledger
+# ---------------------------------------------------------------------------
+
+_OPS = st.lists(st.tuples(st.integers(min_value=0, max_value=99),
+                          st.integers(min_value=0, max_value=31)),
+                min_size=24, max_size=56)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_OPS)
+def test_random_chaos_interleavings_conserve_ledger(ops):
+    """Random admit/abort/shed/degrade/kill/join interleavings must
+    conserve the ledger invariant: every offered request ends in exactly
+    one terminal or in-flight state, aborted rids vanish from every
+    container, and after a full drain no instance holds a single block."""
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=2, max_queue=4)
+    sim.kick = lambda inst: None
+    pol = sim.policy
+    ctrl = FleetController()
+    sim.fleet = ctrl
+    issued = []
+    aborted_rids = set()
+    rid_seq = iter(range(10_000))
+
+    def drain_requeues():
+        while sim._heap:
+            _, _, kind, data = heapq.heappop(sim._heap)
+            if kind == "arrival":
+                sim._handle_arrival(data)
+
+    def tick():
+        for inst in sim.instances:
+            if not inst.alive:
+                continue
+            inst.health = step_health(inst.health, inst.degrade_factor)
+            if inst.prefill_queue:
+                r = inst.prefill_queue.pop(0)
+                r.generated = 1
+                pol.on_prefill_done(inst, [r])
+                continue
+            done = []
+            for rid, r in list(inst.decode_batch.items()):
+                r.generated += 1
+                if r.done:
+                    del inst.decode_batch[rid]
+                    done.append(r)
+                    r.finish_time = sim.now
+                    sim.finished.append(r)
+            pol.on_decode_done(inst, done)
+
+    def check_invariants():
+        for rid in aborted_rids:
+            for inst in sim.instances:
+                assert rid not in inst.decode_batch
+                assert rid not in inst.replicas
+                assert rid not in inst.synced_marks
+                assert all(r.rid != rid for r in inst.prefill_queue)
+            assert rid not in pol.placement
+        # resident sets and ledgers agree (reconcile-on-read is exact)
+        for inst in sim.instances:
+            led = inst.synced_store().ledger
+            assert set(led.tables) == (set(inst.decode_batch)
+                                       | set(inst.replicas))
+        resident = set()
+        for inst in sim.instances:
+            resident |= set(inst.decode_batch)
+            resident |= {r.rid for r in inst.prefill_queue}
+        terminal = (len(sim.finished) + len(sim.shed) + len(sim.aborted)
+                    + len(sim.dropped))
+        assert terminal + len(resident) == len(issued), \
+            "a request leaked out of the lifecycle accounting"
+
+    for kind, arg in ops:
+        if kind < 40:                                   # arrive
+            r = SimRequest(rid=next(rid_seq), arrival=sim.now,
+                           prompt_len=8 + arg % 8, decode_len=4 + arg % 6)
+            issued.append(r)
+            sim._handle_arrival(r)
+        elif kind < 70:                                 # tick
+            tick()
+        elif kind < 80 and issued:                      # abort
+            victim = issued[arg % len(issued)]
+            got = sim.abort(victim.rid)
+            if got is not None:
+                aborted_rids.add(victim.rid)
+        elif kind < 86:                                 # degrade
+            pol._fleet_degrade(arg % 2, 2.0 + arg % 4, 1.0, ctrl)
+        elif kind < 90:                                 # recover
+            pol._fleet_recover(arg % 2, ctrl)
+        elif kind < 95:                                 # kill + requeue
+            iid = arg % 2
+            if sim.instances[iid].alive \
+                    and any(i.alive for i in sim.instances if i.iid != iid):
+                pol._fleet_kill(iid, ctrl)
+                drain_requeues()
+        else:                                           # join (revive)
+            iid = arg % 2
+            if not sim.instances[iid].alive:
+                pol._fleet_join(iid, ctrl)
+        check_invariants()
+
+    for _ in range(400):
+        if not any(i.decode_batch or i.prefill_queue
+                   for i in sim.instances if i.alive):
+            break
+        tick()
+    check_invariants()
+    # after the drain every *alive* path is empty and no block leaks
+    for inst in sim.instances:
+        if inst.alive:
+            assert not inst.decode_batch and not inst.prefill_queue
+            assert inst.synced_store().ledger.used_blocks() == 0
+
+
+# ---------------------------------------------------------------------------
+# live executor: admission control + abort lifecycle units
+# ---------------------------------------------------------------------------
+
+
+def _live_req(cfg, i, plen, dlen, key):
+    return Request(prompt_len=plen, max_new_tokens=dlen,
+                   prompt_tokens=jax.random.randint(
+                       jax.random.fold_in(key, i), (1, plen), 0,
+                       cfg.vocab_size))
+
+
+def test_live_max_queue_sheds_at_door(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=4,
+                          kv_capacity=128, policy=AcceLLMScheduler(),
+                          max_queue=2)
+    key = jax.random.PRNGKey(3)
+    reqs = [_live_req(cfg, i, 6 + i % 3, 4, key) for i in range(4)]
+    for r in reqs:
+        cluster.submit(r)
+    assert len(cluster.shed) == 2, "arrivals 3 and 4 exceed the bound"
+    assert all(r.phase is Phase.SHED for r in cluster.shed)
+    assert cluster.stats["sheds"] == 2
+    done = cluster.run(max_steps=80)
+    assert len(done) == 2
+    assert len(done) + len(cluster.shed) == len(cluster._submitted)
+    # a shed rid may be resubmitted later (its terminal state is final)
+    again = Request(prompt_len=6, max_new_tokens=3, rid=cluster.shed[0].rid,
+                    prompt_tokens=jax.random.randint(
+                        jax.random.fold_in(key, 9), (1, 6), 0,
+                        cfg.vocab_size))
+    cluster.submit(again)
+    cluster.run(max_steps=60)
+    assert len(again.output_tokens) == again.max_new_tokens
+
+
+def test_live_shed_deadline_refuses_stale_queue(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=2,
+                          kv_capacity=64, policy="vllm", shed_deadline=3.0)
+    key = jax.random.PRNGKey(4)
+    # more arrivals than the two-slot engines can start on time
+    reqs = [_live_req(cfg, i, 6, 8, key) for i in range(8)]
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run(max_steps=200)
+    assert cluster.shed, "an 8-deep backlog on 2 slots must blow a 3-iter " \
+                         "deadline for someone"
+    assert all(r.phase is Phase.SHED for r in cluster.shed)
+    assert all(not r.output_tokens for r in cluster.shed), \
+        "deadline sheds must never have consumed decode"
+    assert len(done) + len(cluster.shed) == len(reqs)
+    rep = slo_summary(cluster._submitted, SLO(ttft=3.0), duration=cluster.now,
+                      unit="iters")
+    assert rep.n_shed == len(cluster.shed)
+    assert rep.n_submitted == len(reqs)
+    assert rep.attainment < 1.0, "sheds count as SLO misses"
+    assert "shed" in rep.describe()
+
+
+def test_live_abort_mid_decode_frees_all_state(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=8,
+                          kv_capacity=256, policy=AcceLLMScheduler())
+    key = jax.random.PRNGKey(5)
+    reqs = [_live_req(cfg, i, 8, 12, key) for i in range(2)]
+    for r in reqs:
+        cluster.submit(r)
+    for _ in range(4):
+        cluster.step()
+    victim = reqs[0]
+    assert victim.rid in cluster.placements, "victim must be decoding"
+    pl = cluster.placements[victim.rid]
+    assert pl.replica is not None, "redundancy must have mirrored it"
+    got = cluster.abort(victim.rid)
+    assert got is victim and victim.phase is Phase.ABORTED
+    assert victim.rid not in cluster.placements
+    for eng in cluster.engines:
+        assert victim.rid not in eng.store.ledger.tables, \
+            "abort must free primary AND replica blocks"
+        assert all(r.rid != victim.rid for r in eng.slot_req.values())
+    assert cluster.stats["aborts"] == 1
+    # aborting the same rid again is a no-op, unknown rids return None
+    assert cluster.abort(victim.rid) is None
+    assert cluster.abort(99_999) is None
+    assert cluster.stats["aborts"] == 1
+    # the survivor is unaffected
+    done = cluster.run(max_steps=80)
+    assert reqs[1] in done
+    assert len(reqs[1].output_tokens) == reqs[1].max_new_tokens
+
+
+def test_live_abort_queued_request(setup):
+    cfg, params = setup
+    cluster = LiveCluster(cfg, params, n_instances=2, num_slots=4,
+                          kv_capacity=128, policy=AcceLLMScheduler())
+    key = jax.random.PRNGKey(6)
+    reqs = [_live_req(cfg, i, 6, 4, key) for i in range(3)]
+    for r in reqs:
+        cluster.submit(r)
+    got = cluster.abort(reqs[2].rid)     # still queued: nothing resident
+    assert got is reqs[2] and got.phase is Phase.ABORTED
+    done = cluster.run(max_steps=80)
+    assert len(done) == 2 and reqs[2] not in done
+
+
+def test_sim_run_sheds_and_aborts_end_to_end():
+    reqs = [SimRequest(rid=i, arrival=0.0, prompt_len=24, decode_len=16)
+            for i in range(40)]
+    sim = Simulator(AcceLLMPolicy(), _perf(), n_instances=2,
+                    max_queue=4, shed_deadline=2.0)
+    sim.run(requests=reqs, horizon=600.0)
+    assert sim.shed, "a 40-request burst against max_queue=4 must shed"
+    assert all(r.phase is Phase.SHED for r in sim.shed)
+    assert len(sim.finished) + len(sim.shed) + len(sim.dropped) == len(reqs)
+    rep = slo_summary(sim.submitted, SLO(ttft=5.0, tbt=2.0),
+                      duration=sim.now, unit="s")
+    assert rep.n_shed == len(sim.shed)
+    assert rep.n_submitted == len(reqs)
+    # shed requests hold no blocks anywhere
+    for inst in sim.instances:
+        led = inst.synced_store().ledger
+        for r in sim.shed:
+            assert r.rid not in led.tables
+
+
+def test_serve_report_counts_shed_and_aborted(setup):
+    from repro.api import ServeSpec, serve
+    cfg, params = setup
+    spec = ServeSpec(arch="starcoder2-3b", policy="accellm", n_instances=2,
+                     num_slots=4, kv_capacity=128, n_requests=6,
+                     workload="light", max_steps=200, max_queue=2,
+                     slo=SLO(ttft=20.0, tbt=4.0))
+    report = serve(spec, cfg=cfg, params=params)
+    assert report.n_shed > 0
+    assert report.all_finished, \
+        "shed requests are terminal: a degraded run still completes"
+    assert report.n_unfinished == 0
+    assert f"({report.n_shed} shed)" in report.describe()
+    s = report.slo()
+    assert s.n_shed == report.n_shed
+    assert s.n_submitted == report.n_submitted
